@@ -1,0 +1,101 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+All paper experiments train the same maxout network (paper §2) on the
+synthetic PI-MNIST-like task (784-dim, 10 classes — real MNIST is not
+available offline; see DESIGN.md §7.1) and report the *final loss
+normalized by the float32 baseline*, mirroring the paper's normalized
+final-test-error presentation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy
+from repro.data import SyntheticImages
+from repro.models import maxout as MX
+from repro.optim.opt import OptConfig, sgd_init
+from repro.train import init_train_state, make_train_step
+from repro.train.calibrate import calibrate
+
+STEPS = 120
+BATCH = 64
+
+CFG = MX.MaxoutConfig(hidden=(48,), pieces=3)
+OPT = OptConfig(kind="sgd", lr=0.1, lr_decay_steps=2000,
+                max_col_norm=1.9365)
+DATA = SyntheticImages.hard()
+GS = MX.group_shapes(CFG)
+
+
+def _batches(n):
+    for i in range(n):
+        b = DATA.batch(i, BATCH)
+        yield {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+
+@functools.lru_cache(maxsize=None)
+def calibrated_exps_cached(policy: PrecisionPolicy):
+    obs = dataclasses.replace(policy, arithmetic="observe", storage="sim")
+    params0 = MX.init_params(CFG, jax.random.PRNGKey(7))
+
+    def obs_loss(p, b, s, exps):
+        return MX.loss_fn(CFG, obs, p, b, exps, s, rng=jax.random.PRNGKey(1))
+
+    exps = calibrate(obs_loss, params0, GS, policy, OPT, _batches(10),
+                     steps=6)
+    return tuple(sorted((k, float(jnp.ravel(v)[0])) for k, v in exps.items()))
+
+
+def train_once(policy: PrecisionPolicy, steps: int = STEPS):
+    """Returns (final_loss, eval_accuracy, seconds_per_step).
+
+    The benchmark metric is *final loss normalized by fp32* — on the
+    synthetic task the error rate sits near the Bayes floor and compresses
+    format differences, while the loss preserves the paper's ordering.
+    """
+    if policy.dynamic:
+        init_exp = {k: v for k, v in calibrated_exps_cached(policy)}
+    else:
+        init_exp = -8.0
+    params = MX.init_params(CFG, jax.random.PRNGKey(7))
+    state = init_train_state(params, sgd_init(params), GS, policy,
+                             init_exp=init_exp)
+
+    def loss_fn(p, b, s, exps):
+        return MX.loss_fn(CFG, policy, p, b, exps, s,
+                          rng=jax.random.PRNGKey(1))
+
+    step = jax.jit(make_train_step(loss_fn, GS, policy, OPT))
+    t0 = None
+    for i, b in enumerate(_batches(steps)):
+        state, m = step(state, b, jax.random.PRNGKey(i))
+        if i == 0:
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+    jax.block_until_ready(m["loss"])
+    sps = (time.perf_counter() - t0) / max(steps - 1, 1)
+
+    ev = DATA.eval_set(1024)
+    sinks = {n: jnp.zeros(s + (3,), jnp.float32) for n, s in GS.items()
+             if n.startswith("g:")}
+    from repro.train.state import unpack_tree
+    params_eval = (unpack_tree(state.params) if policy.storage == "packed"
+                   else state.params)
+    acc = MX.accuracy(CFG, policy, params_eval,
+                      {"x": jnp.asarray(ev["x"]), "y": jnp.asarray(ev["y"])},
+                      state.scale.exps, sinks)
+    return float(m["loss"]), float(acc), sps
+
+
+_BASELINE = {}
+
+
+def fp32_baseline():
+    if "v" not in _BASELINE:
+        _BASELINE["v"] = train_once(PrecisionPolicy("float32"))
+    return _BASELINE["v"]

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: fused Pallas quantize / qmatmul vs jnp composite.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+times measure the *reference semantics*, not TPU perf; the jnp-composite
+rows are the ones that time real XLA-compiled code. Roofline projections
+for the TPU kernel live in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import fixed_round
+from repro.kernels.dfxp.ops import dfxp_quantize
+from repro.kernels.qmatmul.ops import qmatmul
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    out = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    e = jnp.float32(-6)
+
+    jnp_q = jax.jit(lambda x, e: fixed_round(x, 10, e))
+    out.append(("kernels/quantize_jnp_1024x1024", _time(jnp_q, x, e), 1.0))
+    out.append(("kernels/quantize_pallas_interp_1024x1024",
+                _time(lambda x, e: dfxp_quantize(x, e, width=10,
+                                                 interpret=True), x, e), 1.0))
+
+    a = jax.random.normal(jax.random.PRNGKey(1), (256, 512))
+    b = jax.random.normal(jax.random.PRNGKey(2), (512, 256))
+    ref = jax.jit(lambda a, b: qmatmul_ref(a, b, e, e, width=10))
+    out.append(("kernels/qmatmul_jnp_256x512x256", _time(ref, a, b),
+                2 * 256 * 512 * 256 / 1e6))
+    out.append(("kernels/qmatmul_pallas_interp_256x512x256",
+                _time(lambda a, b: qmatmul(a, b, e, e, width=10,
+                                           interpret=True), a, b),
+                2 * 256 * 512 * 256 / 1e6))
+    return out

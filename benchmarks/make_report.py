@@ -1,0 +1,56 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from results."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .roofline import NOTES, analyse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    seen = {}
+    for line in open(args.results):
+        r = json.loads(line)
+        if r.get("ok"):
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
+
+    recs = sorted(seen.values(), key=lambda r: (r["arch"], r["shape"],
+                                                r["mesh"]))
+    print("### Dry-run (per-device, from the compiled artifact)\n")
+    print("| arch | shape | mesh | compile_s | args_GB | temp_GB | "
+          "flops/dev | HBM_GB/dev | coll_GB/dev | a2a | ag | ar |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        la = r.get("loop_aware", {})
+        kinds = la.get("collective_by_kind", {})
+        pd = r["per_device"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['compile_s']:.0f} "
+              f"| {pd['argument_bytes']/2**30:.2f} "
+              f"| {pd['temp_bytes']/2**30:.2f} "
+              f"| {la.get('flops', 0):.2e} "
+              f"| {la.get('traffic_bytes', 0)/1e9:.1f} "
+              f"| {la.get('collective_bytes', 0)/1e9:.2f} "
+              f"| {kinds.get('all-to-all', 0)/1e9:.1f} "
+              f"| {kinds.get('all-gather', 0)/1e9:.1f} "
+              f"| {kinds.get('all-reduce', 0)/1e9:.1f} |")
+
+    print("\n### Roofline (v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | mesh | compute_s | memory_s | coll_s | "
+          "bottleneck | useful | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        a = analyse(r)
+        print(f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+              f"| {a['compute_s']:.3g} | {a['memory_s']:.3g} "
+              f"| {a['coll_s']:.3g} | **{a['bottleneck']}** "
+              f"| {a['useful_ratio']:.2f} "
+              f"| {NOTES[a['bottleneck']].split(':')[0]} |")
+
+
+if __name__ == "__main__":
+    main()

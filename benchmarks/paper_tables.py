@@ -1,0 +1,86 @@
+"""Paper artifacts: Table 3 + Figures 1-4, on the scaled synthetic task.
+
+Each function prints CSV rows ``name,us_per_call,derived`` where derived is
+the normalized final loss (÷ fp32 baseline) — the paper's presentation.
+"""
+from __future__ import annotations
+
+from repro.core import PrecisionPolicy
+
+from ._common import fp32_baseline, train_once
+
+
+def table3_formats():
+    """Table 3: error by format (fp32 / fp16 / fixed 20 / dfxp 10-12)."""
+    base_loss, base_acc, base_sps = fp32_baseline()
+    rows = [("table3/float32_32_32", PrecisionPolicy("float32"))]
+    rows += [("table3/half_float_16_16", PrecisionPolicy("float16"))]
+    rows += [("table3/fixed_20_20",
+              PrecisionPolicy("fixed", comp_width=20, update_width=20))]
+    rows += [("table3/dfxp_10_12",
+              PrecisionPolicy("dfxp", comp_width=10, update_width=12,
+                              update_interval=10))]
+    out = []
+    for name, pol in rows:
+        loss, acc, sps = train_once(pol)
+        out.append((name, sps * 1e6, loss / base_loss))
+    return out
+
+
+def fig1_radix():
+    """Fig 1: static fixed point, radix position sweep at width 32."""
+    base_loss, _, _ = fp32_baseline()
+    out = []
+    for int_bits in (1, 3, 5, 7, 9, 12):
+        pol = PrecisionPolicy("fixed", comp_width=32, update_width=32,
+                              fixed_int_bits=int_bits)
+        loss, acc, sps = train_once(pol)
+        out.append((f"fig1/radix_{int_bits}", sps * 1e6, loss / base_loss))
+    return out
+
+
+def fig2_comp_width():
+    """Fig 2: computation bit-width sweep (dfxp + fixed), update width 31."""
+    base_loss, _, _ = fp32_baseline()
+    out = []
+    for w in (14, 12, 10, 8, 6):
+        pol = PrecisionPolicy("dfxp", comp_width=w, update_width=31,
+                              update_interval=10)
+        loss, _, sps = train_once(pol)
+        out.append((f"fig2/dfxp_comp_{w}", sps * 1e6, loss / base_loss))
+    for w in (24, 20, 16):
+        pol = PrecisionPolicy("fixed", comp_width=w, update_width=31)
+        loss, _, sps = train_once(pol)
+        out.append((f"fig2/fixed_comp_{w}", sps * 1e6, loss / base_loss))
+    return out
+
+
+def fig3_update_width():
+    """Fig 3: parameter-update bit-width sweep, computation width 31."""
+    base_loss, _, _ = fp32_baseline()
+    out = []
+    for w in (16, 12, 10, 8):
+        pol = PrecisionPolicy("dfxp", comp_width=31, update_width=w,
+                              update_interval=10)
+        loss, _, sps = train_once(pol)
+        out.append((f"fig3/dfxp_update_{w}", sps * 1e6, loss / base_loss))
+    for w in (20, 16):
+        pol = PrecisionPolicy("fixed", comp_width=31, update_width=w)
+        loss, _, sps = train_once(pol)
+        out.append((f"fig3/fixed_update_{w}", sps * 1e6, loss / base_loss))
+    return out
+
+
+def fig4_overflow_rate():
+    """Fig 4: max-overflow-rate × computation width."""
+    base_loss, _, _ = fp32_baseline()
+    out = []
+    for rate in (1e-2, 1e-3, 1e-4):
+        for w in (8, 10):
+            pol = PrecisionPolicy("dfxp", comp_width=w, update_width=31,
+                                  update_interval=10,
+                                  max_overflow_rate=rate)
+            loss, _, sps = train_once(pol)
+            out.append((f"fig4/rate_{rate:g}_comp_{w}", sps * 1e6,
+                        loss / base_loss))
+    return out

@@ -1,0 +1,45 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Paper artifacts (Table 3, Figures 1-4) train the maxout network under
+# each arithmetic on the scaled synthetic task; ``derived`` is the final
+# loss normalized by the fp32 baseline (the paper's normalized test error).
+# Kernel rows report microseconds per call; ``derived`` is MFLOP for
+# matmuls. Run with: PYTHONPATH=src python -m benchmarks.run [--quick]
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="table3 + kernels only")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import kernels_bench, paper_tables
+
+    suites = [
+        ("table3", paper_tables.table3_formats),
+        ("fig1", paper_tables.fig1_radix),
+        ("fig2", paper_tables.fig2_comp_width),
+        ("fig3", paper_tables.fig3_update_width),
+        ("fig4", paper_tables.fig4_overflow_rate),
+        ("kernels", kernels_bench.run),
+    ]
+    if args.quick:
+        suites = [s for s in suites if s[0] in ("table3", "kernels")]
+    if args.only:
+        suites = [s for s in suites if s[0] in args.only.split(",")]
+
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]:.4f}", flush=True)
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0,0  # {e}", file=sys.stderr)
+            raise
+
+
+if __name__ == '__main__':
+    main()

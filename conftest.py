@@ -1,0 +1,4 @@
+# Root conftest: puts the repo root on sys.path (for `import benchmarks`)
+# under bare `pytest` invocations. Deliberately does NOT touch XLA_FLAGS —
+# tests must see 1 CPU device; multi-device tests spawn subprocesses
+# (see tests/test_dist.py), and only launch/dryrun.py forces 512 devices.

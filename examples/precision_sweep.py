@@ -1,0 +1,73 @@
+"""Reproduce the paper's bit-width frontier (Figures 2-3) on a scaled task:
+sweep DFXP computation and update widths independently, print the knee.
+
+    PYTHONPATH=src python examples/precision_sweep.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy
+from repro.data import SyntheticImages
+from repro.models import maxout as MX
+from repro.optim.opt import OptConfig, sgd_init
+from repro.train import init_train_state, make_train_step
+from repro.train.calibrate import calibrate
+
+STEPS = 120
+cfg = MX.MaxoutConfig(hidden=(48,), pieces=3)
+opt_cfg = OptConfig(kind="sgd", lr=0.1, lr_decay_steps=2000)
+data = SyntheticImages()
+gs = MX.group_shapes(cfg)
+
+
+def final_loss(policy, init_exp):
+    params = MX.init_params(cfg, jax.random.PRNGKey(7))
+    state = init_train_state(params, sgd_init(params), gs, policy,
+                             init_exp=init_exp)
+
+    def loss_fn(p, b, s, exps):
+        return MX.loss_fn(cfg, policy, p, b, exps, s,
+                          rng=jax.random.PRNGKey(1))
+
+    step = jax.jit(make_train_step(loss_fn, gs, policy, opt_cfg))
+    for i in range(STEPS):
+        b = data.batch(i, 64)
+        state, m = step(state, {"x": jnp.asarray(b["x"]),
+                                "y": jnp.asarray(b["y"])},
+                        jax.random.PRNGKey(i))
+    return float(m["loss"])
+
+
+def calibrated_exps(policy):
+    obs = dataclasses.replace(policy, arithmetic="observe")
+    params0 = MX.init_params(cfg, jax.random.PRNGKey(7))
+
+    def obs_loss(p, b, s, exps):
+        return MX.loss_fn(cfg, obs, p, b, exps, s, rng=jax.random.PRNGKey(1))
+
+    batches = ({"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+               for b in (data.batch(i, 64) for i in range(10)))
+    return calibrate(obs_loss, params0, gs, policy, opt_cfg, batches, steps=6)
+
+
+def main():
+    base = final_loss(PrecisionPolicy("float32"), -8.0)
+    print(f"float32 baseline loss: {base:.4f}\n")
+    print("comp-width sweep (update=12):   [paper Fig.2: knee at 10]")
+    for w in (14, 12, 10, 8, 6):
+        pol = PrecisionPolicy("dfxp", comp_width=w, update_width=12,
+                              update_interval=10)
+        loss = final_loss(pol, calibrated_exps(pol))
+        print(f"  comp={w:2d}: loss={loss:.4f} ({loss/base:.2f}x fp32)")
+    print("update-width sweep (comp=10):   [paper Fig.3: knee at 12]")
+    for w in (16, 12, 10, 8):
+        pol = PrecisionPolicy("dfxp", comp_width=10, update_width=w,
+                              update_interval=10)
+        loss = final_loss(pol, calibrated_exps(pol))
+        print(f"  update={w:2d}: loss={loss:.4f} ({loss/base:.2f}x fp32)")
+
+
+if __name__ == "__main__":
+    main()

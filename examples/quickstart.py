@@ -1,0 +1,81 @@
+"""Quickstart: the paper in one file — train the same maxout network under
+fp32 / fp16 / fixed-20 / DFXP-10/12 and watch low precision match fp32.
+
+Runs in ~2 minutes on CPU:
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy
+from repro.data import SyntheticImages
+from repro.models import maxout as MX
+from repro.optim.opt import OptConfig, sgd_init
+from repro.train import init_train_state, make_train_step
+from repro.train.calibrate import calibrate
+
+STEPS = 150
+cfg = MX.MaxoutConfig(hidden=(64, 64), pieces=3)
+opt_cfg = OptConfig(kind="sgd", lr=0.1, lr_decay_steps=2000,
+                    max_col_norm=1.9365)
+data = SyntheticImages()
+key = jax.random.PRNGKey(0)
+gs = MX.group_shapes(cfg)
+
+
+def run(policy, init_exp=-8.0):
+    params = MX.init_params(cfg, jax.random.PRNGKey(7))
+    state = init_train_state(params, sgd_init(params), gs, policy,
+                             init_exp=init_exp)
+
+    def loss_fn(p, b, s, exps):
+        return MX.loss_fn(cfg, policy, p, b, exps, s,
+                          rng=jax.random.PRNGKey(1))
+
+    step = jax.jit(make_train_step(loss_fn, gs, policy, opt_cfg))
+    for i in range(STEPS):
+        b = data.batch(i, 64)
+        state, m = step(state, {"x": jnp.asarray(b["x"]),
+                                "y": jnp.asarray(b["y"])}, key)
+    ev = data.eval_set(1024)
+    acc = MX.accuracy(cfg, policy, state.params if policy.storage == "sim"
+                      else jax.tree.map(lambda x: x, state.params),
+                      {"x": jnp.asarray(ev["x"]), "y": jnp.asarray(ev["y"])},
+                      state.scale.exps,
+                      {n: jnp.zeros(s + (3,), jnp.float32)
+                       for n, s in gs.items() if n.startswith("g:")})
+    return float(m["loss"]), float(acc)
+
+
+def main():
+    # calibrate DFXP scales first (paper §9.3)
+    dfxp = PrecisionPolicy("dfxp", comp_width=10, update_width=12,
+                           update_interval=10)
+    obs = dataclasses.replace(dfxp, arithmetic="observe")
+    params0 = MX.init_params(cfg, key)
+
+    def obs_loss(p, b, s, exps):
+        return MX.loss_fn(cfg, obs, p, b, exps, s, rng=jax.random.PRNGKey(1))
+
+    batches = ({"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+               for b in (data.batch(i, 64) for i in range(10)))
+    init_exp = calibrate(obs_loss, params0, gs, dfxp, opt_cfg, batches,
+                         steps=8)
+
+    rows = [
+        ("float32 (baseline)", PrecisionPolicy("float32"), -8.0),
+        ("float16", PrecisionPolicy("float16"), -8.0),
+        ("fixed point 20/20", PrecisionPolicy("fixed", comp_width=20,
+                                              update_width=20), -8.0),
+        ("dfxp 10/12 (paper)", dfxp, init_exp),
+    ]
+    print(f"{'format':22s} {'final loss':>10s} {'eval acc':>9s}")
+    for name, pol, ie in rows:
+        loss, acc = run(pol, ie)
+        print(f"{name:22s} {loss:10.4f} {acc:9.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serve a DFXP-quantized model with batched requests (prefill + decode).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    serve_main(["--arch", "llama3_8b", "--smoke", "--arithmetic", "dfxp",
+                "--num-requests", "4", "--prompt-len", "32",
+                "--max-new", "16"])

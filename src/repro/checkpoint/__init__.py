@@ -1,0 +1,2 @@
+"""Elastic checkpointing: manifest + per-leaf arrays, restore-with-reshard."""
+from .manager import CheckpointManager, restore_tree, save_tree  # noqa: F401

@@ -1,0 +1,147 @@
+"""Fault-tolerant checkpointing without external deps (no orbax offline).
+
+Layout per step::
+
+    <dir>/step_000100/
+        manifest.json      # tree structure, shapes, dtypes, leaf → file
+        <leaf-id>.npy      # one .npy per leaf (host-gathered global array)
+        _COMMITTED         # written last: restore ignores torn checkpoints
+
+Design points for the 1000-node story:
+  * **Elastic restore**: arrays are stored as *global* content + the
+    manifest records logical shape/dtype only. ``restore_tree`` device_puts
+    onto whatever mesh/sharding the *new* job provides — restarting on a
+    different pod count (after node loss) reshards transparently.
+  * **Atomicity**: `_COMMITTED` marker written after all leaves; the
+    manager's `latest()` skips uncommitted dirs, so a preemption mid-save
+    falls back to the previous step.
+  * **Async**: `save_async` snapshots to host memory synchronously (cheap)
+    and writes files on a background thread, overlapping the next step.
+  * **Retention**: keeps the newest ``keep`` committed checkpoints.
+  * Multi-host note: in a real multi-controller job each host would write
+    only the shards it owns (`jax.experimental.multihost_utils`); in this
+    single-controller container the process gathers full arrays.
+
+PackedArray leaves (packed storage mode) round-trip transparently —
+they're ordinary pytree nodes whose leaves are int16 mantissas + exps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_tree(tree: Any, path: str) -> None:
+    """Synchronous atomic save of a pytree of arrays."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def restore_tree(template: Any, path: str, shardings: Any = None) -> Any:
+    """Restore into ``template``'s structure; reshard onto ``shardings``.
+
+    ``template`` may hold arrays or ShapeDtypeStructs; ``shardings`` (a
+    matching pytree of NamedShardings, or None) controls placement — pass
+    the *new* mesh's shardings to reshard elastically.
+    """
+    leaves_t, treedef = _flatten(template)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest["leaves"]) == len(leaves_t), \
+        f"checkpoint has {len(manifest['leaves'])} leaves, template {len(leaves_t)}"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_t))
+    out = []
+    for meta, tmpl, sh in zip(manifest["leaves"], leaves_t, shard_leaves):
+        arr = np.load(os.path.join(path, meta["file"]))
+        assert tuple(arr.shape) == tuple(tmpl.shape), (arr.shape, tmpl.shape)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self):
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "_COMMITTED")):
+                steps.append(int(d.split("_")[1]))
+        return sorted(steps)
+
+    def latest(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any) -> None:
+        save_tree(tree, self._step_dir(step))
+        self._gc()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot to host now; write in the background."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=lambda: (save_tree(host_tree, self._step_dir(step)),
+                            self._gc()),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        return restore_tree(template, self._step_dir(step), shardings)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

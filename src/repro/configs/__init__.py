@@ -1,0 +1,63 @@
+"""Architecture registry: the 10 assigned configs + the paper's maxout nets.
+
+``get(name)`` → full ModelConfig; ``get_smoke(name)`` → reduced same-family
+config for CPU smoke tests; ``cells(name)`` → the runnable shape cells
+(skips are documented in each config file and DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.transformer import ModelConfig
+
+from .shapes import SHAPES, ShapeSpec, input_specs  # noqa: F401
+
+ARCHS = (
+    "zamba2_1p2b",
+    "llama3_8b",
+    "qwen3_14b",
+    "phi3_medium_14b",
+    "gemma3_27b",
+    "seamless_m4t_medium",
+    "llama4_maverick_400b",
+    "granite_moe_1b",
+    "mamba2_370m",
+    "qwen2_vl_72b",
+)
+
+_ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "llama3-8b": "llama3_8b",
+    "qwen3-14b": "qwen3_14b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "gemma3-27b": "gemma3_27b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "llama4-maverick-400b": "llama4_maverick_400b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "granite-moe-1b": "granite_moe_1b",
+    "mamba2-370m": "mamba2_370m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+
+def _module(name: str):
+    key = _ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def cells(name: str) -> Tuple[str, ...]:
+    return _module(name).CELLS
+
+
+def all_cells() -> Dict[str, Tuple[str, ...]]:
+    return {a: cells(a) for a in ARCHS}

@@ -1,0 +1,64 @@
+"""Assigned input shapes (4 per architecture) + ShapeDtypeStruct builders.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins (no device
+allocation) for every model input of a given (arch, shape) cell — the same
+pattern the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: T.ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input stand-ins for one cell. For decode shapes this is the
+    serve-step input: one new token + a full cache of ``seq_len``."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.input_mode == "tokens":
+            batch["tokens"] = sds((B, S), _I32)
+        else:
+            batch["embeds"] = sds((B, S, cfg.d_model), _F32)
+            if cfg.mrope_sections:
+                batch["positions"] = sds((3, B, S), _I32)
+        if cfg.encoder_layers:
+            batch["src_embeds"] = sds((B, S, cfg.d_model), _F32)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), _I32)
+        return {"batch": batch}
+    # decode: cache of seq_len tokens + one new token
+    src_len = S if cfg.encoder_layers else 0
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, src_len=src_len))
+    tok = (sds((B,), _I32) if cfg.input_mode == "tokens"
+           else sds((B, 1, cfg.d_model), _F32))
+    return {"cache": cache, "tokens": tok, "pos": sds((), _I32)}

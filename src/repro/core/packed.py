@@ -1,0 +1,77 @@
+"""Packed int-mantissa storage for parameters/optimizer state (beyond paper).
+
+The paper *simulates* narrow storage inside float32 containers (§7). On real
+hardware the 12-bit parameter store is the point: a 400B-parameter model's
+masters + momentum shrink from 3.2 TB (f32) to 1.6 TB (int16) — the
+difference between fitting a 256-chip v5e pod or not.
+
+``PackedArray`` is a pytree holding an int8/int16 mantissa tensor plus its
+group's log2-step. ``pack``/``unpack`` are elementwise and fuse with the
+surrounding optimizer math, so wide intermediates never materialize at full
+model size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .quant import exact_pow2
+
+Array = jax.Array
+
+
+def container_dtype(width: int):
+    if width <= 8:
+        return jnp.int8
+    if width <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedArray:
+    """int mantissa + log2-step; represents ``mantissa * 2**exp``."""
+
+    mantissa: Array                     # int8/int16/int32
+    exp: Array                          # f32 scalar (integer-valued)
+    width: int = dataclasses.field(metadata=dict(static=True), default=16)
+
+    @property
+    def shape(self):
+        return self.mantissa.shape
+
+    @property
+    def size(self):
+        return self.mantissa.size
+
+
+def pack(x: Array, width: int, e: Array, *, stochastic_key=None) -> PackedArray:
+    e = jnp.asarray(e, jnp.float32)
+    step = exact_pow2(e)
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    m = x.astype(jnp.float32) / step
+    if stochastic_key is not None:
+        u = jax.random.uniform(stochastic_key, m.shape, jnp.float32)
+        m = jnp.floor(m + u)
+    else:
+        m = jnp.round(m)
+    m = jnp.clip(m, qmin, qmax)
+    return PackedArray(m.astype(container_dtype(width)), e, width)
+
+
+def unpack(p: PackedArray, dtype=jnp.float32) -> Array:
+    return (p.mantissa.astype(jnp.float32) * exact_pow2(p.exp)).astype(dtype)
+
+
+def pack_overflow_stats(x: Array, width: int, e: Array) -> Array:
+    """Same (ovf, ovf_half, total) triple as quant.fixed_round, for packing."""
+    e = jnp.asarray(e, jnp.float32)
+    qmax = float(2 ** (width - 1) - 1)
+    m = jnp.round(x.astype(jnp.float32) / exact_pow2(e))
+    ovf = jnp.sum(jnp.abs(m) > qmax, dtype=jnp.float32)
+    ovfh = jnp.sum(jnp.abs(m) > qmax / 2, dtype=jnp.float32)
+    return jnp.stack([ovf, ovfh, jnp.float32(x.size)])

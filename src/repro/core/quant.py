@@ -1,0 +1,275 @@
+"""Quantizers + autodiff plumbing for low-precision training (paper §4-§7).
+
+Simulation contract (paper §7): values are held in wide float containers but
+are *representable* in the target format every time they cross a group
+boundary — activations/weights on the forward pass, cotangents on the
+backward pass, parameters at update time. Accumulations stay wide (the
+paper's accumulator hypothesis == the TPU MXU f32-accumulate contract).
+
+Autodiff design:
+  * :func:`qbound` quantizes the forward value with the *activation* format
+    and the backward cotangent with the *gradient* format (custom_vjp).
+  * Backward-pass overflow statistics cannot exit a custom_vjp as aux
+    outputs, so they are routed as the **cotangent of a zero-valued sink
+    input**: ``jax.grad(loss, argnums=sinks)`` then returns, for each
+    quantization site, ``(n_overflow, n_overflow_at_half_scale, n_total)``
+    as an ordinary gradient. ``lax.scan`` over layers stacks them per layer
+    and SPMD sums them across data-parallel shards — exactly the global
+    statistics the paper's scale controller consumes.
+  * Forward-pass statistics are computed on ``stop_gradient``-ed values as
+    plain outputs (XLA CSEs the shared division).
+
+Scale exponents are float32 arrays holding integer values (so that zero
+cotangents exist for them under custom_vjp); ``step = 2**e``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import (
+    DynamicFixedPoint,
+    FixedPoint,
+    FloatFormat,
+    Format,
+    Observe,
+)
+
+Array = jax.Array
+
+_TINY = 1e-38
+
+
+def exact_pow2(e: Array) -> Array:
+    """Bit-exact ``2**e`` for integer-valued float ``e``.
+
+    XLA's ``exp2`` goes through a polynomial libm path and is *not* exact for
+    integer exponents on some backends (observed off-by-ULPs on CPU). The
+    quantization grid must be an exact power of two or round/clip/overflow
+    counting all drift, so we construct it with ``ldexp`` instead.
+    """
+    return jnp.ldexp(jnp.float32(1.0), jnp.asarray(e).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point (static & dynamic share the same grid math)
+# ---------------------------------------------------------------------------
+
+# When enabled, large quantization sites route through the fused Pallas
+# kernel (kernels/dfxp) instead of the jnp composite — identical numerics
+# (kernel tests assert bit-equality), one HBM pass instead of several.
+_PALLAS = {"enabled": False, "interpret": True, "min_size": 1 << 14}
+
+
+def enable_pallas_quantize(enable: bool = True, *, interpret: bool = True,
+                           min_size: int = 1 << 14) -> None:
+    _PALLAS.update(enabled=enable, interpret=interpret, min_size=min_size)
+
+
+def fixed_round(
+    x: Array,
+    width: int,
+    e: Array,
+    *,
+    stochastic: bool = False,
+    key: Optional[Array] = None,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """Round ``x`` onto the grid ``k * 2**e``, ``k`` two's-complement ``width``-bit.
+
+    Returns ``(y, (n_overflow, n_overflow_half))`` where ``n_overflow`` counts
+    pre-clip values outside the representable range and ``n_overflow_half``
+    counts values that would overflow if the scaling factor were halved
+    (``e - 1``) — the two statistics the paper's controller monitors (§5).
+    Counts are float32 scalars (exact for the magnitudes that matter).
+    """
+    if (_PALLAS["enabled"] and not stochastic and jnp.ndim(e) == 0
+            and x.size >= _PALLAS["min_size"]):
+        from repro.kernels.dfxp.ops import dfxp_quantize
+        y, stats = dfxp_quantize(x, e, width=width,
+                                 interpret=_PALLAS["interpret"])
+        return y, (stats[0], stats[1])
+
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    e = jnp.asarray(e, jnp.float32)
+    step = exact_pow2(e)
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+
+    m = xf / step
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        u = jax.random.uniform(key, m.shape, jnp.float32)
+        m_rounded = jnp.floor(m + u)
+    else:
+        m_rounded = jnp.round(m)  # round-half-to-even
+
+    ovf = jnp.sum((m_rounded > qmax) | (m_rounded < qmin), dtype=jnp.float32)
+    # would-overflow at e-1 (step/2): |x / (step/2)| beyond the grid.
+    ovf_half = jnp.sum((m_rounded > qmax / 2) | (m_rounded < qmin / 2),
+                       dtype=jnp.float32)
+
+    y = jnp.clip(m_rounded, qmin, qmax) * step
+    return y.astype(dtype), (ovf, ovf_half)
+
+
+# ---------------------------------------------------------------------------
+# Float emulation
+# ---------------------------------------------------------------------------
+
+def float_round(x: Array, fmt: FloatFormat) -> Array:
+    """Round ``x`` to an ``fmt``-representable value (round-to-nearest-even)."""
+    if fmt.name == "float32":
+        return x
+    dtype = x.dtype
+    if fmt.name == "float16":
+        return x.astype(jnp.float16).astype(dtype)
+    if fmt.name == "bfloat16":
+        return x.astype(jnp.bfloat16).astype(dtype)
+    # Generic (exp_bits, man_bits) emulation, with subnormals at emin.
+    xf = x.astype(jnp.float32)
+    ax = jnp.abs(xf)
+    exp = jnp.floor(jnp.log2(jnp.maximum(ax, _TINY)))
+    exp = jnp.clip(exp, fmt.emin, fmt.emax)
+    step = exact_pow2(exp - fmt.man_bits)
+    y = jnp.round(xf / step) * step
+    y = jnp.clip(y, -fmt.maxval, fmt.maxval)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unified dispatch
+# ---------------------------------------------------------------------------
+
+def q_value(x: Array, fmt: Format, e: Array) -> Array:
+    """Quantize values only (no stats). ``e`` ignored for float formats."""
+    if fmt is None or isinstance(fmt, Observe) or (
+            isinstance(fmt, FloatFormat) and fmt.name == "float32"):
+        return x
+    if isinstance(fmt, FloatFormat):
+        return float_round(x, fmt)
+    if isinstance(fmt, FixedPoint):
+        y, _ = fixed_round(x, fmt.width, jnp.float32(fmt.exp))
+        return y
+    if isinstance(fmt, DynamicFixedPoint):
+        y, _ = fixed_round(x, fmt.width, e)
+        return y
+    raise TypeError(f"unknown format {fmt!r}")
+
+
+def q_stats(x: Array, fmt: Format, e: Array) -> Array:
+    """Overflow statistics ``(n_ovf, n_ovf_half, n_total)`` for ``x`` (no grad).
+
+    For :class:`Observe` (calibration) the first slot carries ``max|x|``
+    instead of an overflow count."""
+    x = jax.lax.stop_gradient(x)
+    n_total = jnp.float32(x.size)
+    if isinstance(fmt, Observe):
+        return jnp.stack([jnp.max(jnp.abs(x.astype(jnp.float32))),
+                          jnp.float32(0), n_total])
+    if isinstance(fmt, FixedPoint):
+        _, (ovf, ovfh) = fixed_round(x, fmt.width, jnp.float32(fmt.exp))
+        return jnp.stack([ovf, ovfh, n_total])
+    if isinstance(fmt, DynamicFixedPoint):
+        _, (ovf, ovfh) = fixed_round(x, fmt.width, jax.lax.stop_gradient(e))
+        return jnp.stack([ovf, ovfh, n_total])
+    return jnp.stack([jnp.float32(0), jnp.float32(0), n_total])
+
+
+# ---------------------------------------------------------------------------
+# Autodiff-aware quantization sites
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_qbound(act_fmt: Format, grad_fmt: Format):
+    """Build the fwd-act / bwd-grad quantizer for a static format pair."""
+
+    @jax.custom_vjp
+    def qb(x, act_e, grad_e, sink):
+        del grad_e, sink
+        return q_value(x, act_fmt, act_e)
+
+    def fwd(x, act_e, grad_e, sink):
+        del sink
+        return q_value(x, act_fmt, act_e), (grad_e,)
+
+    def bwd(res, ct):
+        (grad_e,) = res
+        if isinstance(grad_fmt, Observe):
+            stats = jnp.stack([jnp.max(jnp.abs(ct.astype(jnp.float32))),
+                               jnp.float32(0), jnp.float32(ct.size)])
+            return (ct, jnp.zeros_like(grad_e), jnp.zeros_like(grad_e),
+                    stats)
+        if isinstance(grad_fmt, (FixedPoint, DynamicFixedPoint)):
+            e = (jnp.float32(grad_fmt.exp) if isinstance(grad_fmt, FixedPoint)
+                 else grad_e)
+            qct, (ovf, ovfh) = fixed_round(ct, grad_fmt.width, e)
+            stats = jnp.stack([ovf, ovfh, jnp.float32(ct.size)])
+        elif isinstance(grad_fmt, FloatFormat):
+            qct = float_round(ct, grad_fmt)
+            stats = jnp.stack([jnp.float32(0), jnp.float32(0),
+                               jnp.float32(ct.size)])
+        else:  # None → pass-through
+            qct = ct
+            stats = jnp.zeros((3,), jnp.float32)
+        return qct, jnp.zeros_like(grad_e), jnp.zeros_like(grad_e), stats
+
+    qb.defvjp(fwd, bwd)
+    return qb
+
+
+def qbound(
+    x: Array,
+    act_fmt: Format,
+    grad_fmt: Format,
+    act_e: Array,
+    grad_e: Array,
+    sink: Array,
+) -> Array:
+    """Quantize forward value with ``act_fmt`` and cotangent with ``grad_fmt``.
+
+    ``sink`` must be a zero float32 array of shape ``(3,)``; its gradient
+    receives the backward-pass overflow statistics for this site.
+    """
+    if act_fmt is None and grad_fmt is None:
+        return x
+    act_e = jnp.asarray(act_e, jnp.float32)
+    grad_e = jnp.asarray(grad_e, jnp.float32)
+    return _make_qbound(act_fmt, grad_fmt)(x, act_e, grad_e, sink)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ste(fmt: Format):
+    @jax.custom_vjp
+    def ste(x, e):
+        return q_value(x, fmt, e)
+
+    def fwd(x, e):
+        return q_value(x, fmt, e), None
+
+    def bwd(_, ct):
+        return ct, jnp.float32(0)
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+def ste_quant(x: Array, fmt: Format, e: Array) -> Array:
+    """Forward quantization with straight-through (identity) backward.
+
+    Used for *weight use-time* quantization: the stored (update-width)
+    parameter is re-quantized to the computation width when it enters a
+    multiplication; its gradient is quantized once, in the train step.
+    """
+    if fmt is None:
+        return x
+    return _make_ste(fmt)(x, jnp.asarray(e, jnp.float32))
+
+
+def new_sink() -> Array:
+    """A fresh stats sink for one quantization site."""
+    return jnp.zeros((3,), jnp.float32)

@@ -1,0 +1,97 @@
+"""Dynamic fixed point scale state + the paper's overflow-rate controller (§5).
+
+Each tensor *group* (per layer: weights, weighted sums, outputs, and their
+gradients; plus embeddings/head/params) owns one power-of-two scaling factor,
+stored as a float32 log2-step ``e`` (integer-valued). Groups belonging to a
+scanned layer stack are stored as ``[L]`` vectors so a single ``lax.scan``
+threads them.
+
+Controller rule (paper §5, verbatim semantics):
+  * accumulate ``(n_overflow, n_overflow_half, n_total)`` per group;
+  * every ``update_interval`` steps (the paper used every 10k examples):
+      - if ``overflow_rate > max_overflow_rate``        → scale ×2 (``e+1``)
+      - elif ``overflow_rate_at_half <= max_overflow``  → scale ÷2 (``e-1``)
+  * reset accumulators.
+
+The two branches are mutually exclusive by construction (rate_half ≥ rate),
+so the update is a single branch-free ``jnp.where`` — SPMD-safe and
+identical on every replica because stats are global sums.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+E_MIN, E_MAX = -40.0, 40.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScaleState:
+    """Per-group log2 steps + accumulated overflow statistics."""
+
+    exps: Dict[str, Array]   # group -> f32 (integer-valued), shape [] or [L]
+    acc: Dict[str, Array]    # group -> f32 stats, shape exps.shape + (3,)
+
+    @staticmethod
+    def create(group_shapes: Dict[str, tuple], init_exp=-8.0) -> "ScaleState":
+        """``group_shapes``: group -> () or (L,). ``init_exp``: scalar, or a
+        per-group dict of scalars/arrays (e.g. from calibration)."""
+        exps, acc = {}, {}
+        for name, shape in group_shapes.items():
+            e0 = init_exp[name] if isinstance(init_exp, dict) else init_exp
+            e0 = jnp.asarray(e0, jnp.float32)
+            exps[name] = jnp.broadcast_to(e0, shape).astype(jnp.float32)
+            acc[name] = jnp.zeros(shape + (3,), jnp.float32)
+        return ScaleState(exps=exps, acc=acc)
+
+
+def accumulate(state: ScaleState, stats: Dict[str, Array]) -> ScaleState:
+    """Add this step's statistics. Missing groups are left untouched."""
+    acc = dict(state.acc)
+    for name, s in stats.items():
+        if name in acc:
+            acc[name] = acc[name] + s.astype(jnp.float32)
+    return ScaleState(exps=state.exps, acc=acc)
+
+
+def controller_step(
+    state: ScaleState,
+    *,
+    max_overflow_rate: float,
+    apply: Array,
+) -> ScaleState:
+    """Apply the paper's rule where ``apply`` (bool scalar) is true; reset acc."""
+    new_exps, new_acc = {}, {}
+    for name, e in state.exps.items():
+        a = state.acc[name]
+        total = jnp.maximum(a[..., 2], 1.0)
+        rate = a[..., 0] / total
+        rate_half = a[..., 1] / total
+        up = rate > max_overflow_rate
+        down = jnp.logical_and(jnp.logical_not(up),
+                               rate_half <= max_overflow_rate)
+        delta = up.astype(jnp.float32) - down.astype(jnp.float32)
+        # Groups that saw no data keep their scale.
+        delta = jnp.where(a[..., 2] > 0, delta, 0.0)
+        e_new = jnp.clip(e + delta, E_MIN, E_MAX)
+        new_exps[name] = jnp.where(apply, e_new, e)
+        new_acc[name] = jnp.where(apply, jnp.zeros_like(a), a)
+    return ScaleState(exps=new_exps, acc=new_acc)
+
+
+def calibrate_exp(maxabs: Array, width: int, margin_bits: int = 1) -> Array:
+    """log2-step so that ``maxabs`` fits with ``margin_bits`` of headroom.
+
+    The paper finds initial scales "by training with a higher precision
+    format"; this helper converts observed group max-magnitudes into initial
+    exponents (``calibrate`` mode).
+    """
+    qmax = float(2 ** (width - 1) - 1)
+    need = jnp.ceil(jnp.log2(jnp.maximum(maxabs, 1e-20) / qmax))
+    return jnp.clip(need + margin_bits, E_MIN, E_MAX).astype(jnp.float32)

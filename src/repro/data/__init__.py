@@ -1,0 +1,6 @@
+"""Data pipelines: deterministic synthetic datasets + host-sharded loading."""
+from .synthetic import (  # noqa: F401
+    SyntheticImages,
+    SyntheticLM,
+    shard_batch,
+)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the DFXP quantize kernel (== core.quant.fixed_round)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import exact_pow2
+
+
+def dfxp_quantize_ref(x, e, *, width: int):
+    """Returns (y, stats[2]) — reference for kernels.dfxp."""
+    step = exact_pow2(e)
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    m = jnp.round(x.astype(jnp.float32) / step)
+    ovf = jnp.sum((m > qmax) | (m < qmin), dtype=jnp.float32)
+    ovfh = jnp.sum((m > qmax / 2) | (m < qmin / 2), dtype=jnp.float32)
+    y = (jnp.clip(m, qmin, qmax) * step).astype(x.dtype)
+    return y, jnp.stack([ovf, ovfh])

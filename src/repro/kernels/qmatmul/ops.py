@@ -1,0 +1,29 @@
+"""jit'd wrapper for the quantized matmul kernel: padding + block choice."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .qmatmul_kernel import qmatmul_2d
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def qmatmul(a, b, e_a, e_b, *, width: int = 10, interpret: bool = True):
+    """DFXP matmul ``q(a) @ q(b)`` with f32 accumulation. Any [M,K]x[K,N]."""
+    M, K = a.shape
+    _, N = b.shape
+    bm = min(128, _round_up(M, 8))
+    bn = min(128, _round_up(N, 128))
+    bk = min(128, _round_up(K, 128))
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    ap = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    bp = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    c = qmatmul_2d(ap, bp, e_a, e_b, width=width, block_m=bm, block_n=bn,
+                   block_k=bk, interpret=interpret)
+    return c[:M, :N]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: DFXP quantized matmul with fused operand quantization.
+
+Computes ``C = clipround(A) @ clipround(B)`` with f32 accumulation — the
+paper's multiplication contract (§6-§7: narrow multiplier operands, wide
+accumulators == the TPU MXU's native mode). Fusing the operand rounding
+into the matmul's tile loads removes two full HBM round-trips per matmul
+versus quantize-then-matmul.
+
+TPU adaptation:
+  * 128-aligned (bm, bn, bk) tiles feed the MXU directly;
+  * accumulation lives in a VMEM scratch tile across the k-grid dimension
+    (k is the innermost/sequential grid axis);
+  * operand scales are bit-exact powers of two in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces; interpret mode works without them
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _q(x, inv_step, step, qmax, qmin):
+    m = jnp.round(x.astype(jnp.float32) * inv_step)
+    return jnp.clip(m, qmin, qmax) * step
+
+
+def _kernel(scales_ref, a_ref, b_ref, c_ref, acc_ref, *, qmax_a, qmin_a,
+            qmax_b, qmin_b, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    step_a, inv_a, step_b, inv_b = (scales_ref[0, 0], scales_ref[0, 1],
+                                    scales_ref[0, 2], scales_ref[0, 3])
+    aq = _q(a_ref[...], inv_a, step_a, qmax_a, qmin_a)
+    bq = _q(b_ref[...], inv_b, step_b, qmax_b, qmin_b)
+    acc_ref[...] += jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def qmatmul_2d(a, b, e_a, e_b, *, width: int, block_m: int = 128,
+               block_n: int = 128, block_k: int = 128,
+               interpret: bool = False):
+    """``a``: [M, K], ``b``: [K, N], dims multiples of the block sizes."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    from repro.core.quant import exact_pow2
+    e_a = jnp.asarray(e_a, jnp.float32)
+    e_b = jnp.asarray(e_b, jnp.float32)
+    scales = jnp.stack([exact_pow2(e_a), exact_pow2(-e_a),
+                        exact_pow2(e_b), exact_pow2(-e_b)]).reshape(1, 4)
+    nk = K // block_k
+
+    scratch = [_VMEM((block_m, block_n), jnp.float32)]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax_a=qmax, qmin_a=qmin, qmax_b=qmax,
+                          qmin_b=qmin, nk=nk),
+        grid=(M // block_m, N // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(scales, a, b)

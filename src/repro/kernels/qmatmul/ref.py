@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the quantized matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import exact_pow2
+
+
+def _q(x, e, width):
+    step = exact_pow2(e)
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / step), qmin, qmax) * step
+
+
+def qmatmul_ref(a, b, e_a, e_b, *, width: int):
+    aq = _q(a, e_a, width)
+    bq = _q(b, e_b, width)
+    return jnp.dot(aq, bq, preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,150 @@
+"""Training driver: calibrate → DFXP train, with fault tolerance.
+
+Fault-tolerance contract:
+  * checkpoint every ``--ckpt-every`` steps (async, atomic, keeps 3);
+  * SIGTERM/SIGINT (preemption) → synchronous final checkpoint → exit 143;
+  * restart with the same ``--ckpt-dir`` resumes from the latest committed
+    step; the data pipeline is deterministic in (seed, step), so the token
+    stream continues exactly where it left off;
+  * restore reshards onto whatever mesh the new job has (elastic).
+
+CPU-runnable example (see examples/train_lm.py for the wrapped version):
+  PYTHONPATH=src python -m repro.launch.train --arch granite_moe_1b \
+      --smoke --steps 50 --global-batch 8 --seq-len 64 --arithmetic dfxp
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core.policy import PrecisionPolicy
+from repro.data import SyntheticLM
+from repro.models import transformer as T
+from repro.optim.opt import OptConfig, sgd_init
+from repro.train import init_train_state, make_train_step
+from repro.train.calibrate import calibrate
+
+
+def build_policy(args) -> PrecisionPolicy:
+    return PrecisionPolicy(
+        arithmetic=args.arithmetic, comp_width=args.comp_width,
+        update_width=args.update_width, update_interval=args.update_interval,
+        storage=args.storage,
+        max_overflow_rate=args.max_overflow_rate)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_moe_1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--arithmetic", default="dfxp",
+                    choices=["float32", "float16", "bfloat16", "fixed",
+                             "dfxp"])
+    ap.add_argument("--comp-width", type=int, default=10)
+    ap.add_argument("--update-width", type=int, default=12)
+    ap.add_argument("--update-interval", type=int, default=20)
+    ap.add_argument("--max-overflow-rate", type=float, default=1e-4)
+    ap.add_argument("--storage", default="sim", choices=["sim", "packed"])
+    ap.add_argument("--calibrate-steps", type=int, default=5)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    policy = build_policy(args)
+    gs = T.group_shapes(cfg)
+    opt_cfg = OptConfig(kind=args.optimizer, lr=args.lr,
+                        lr_decay_steps=max(args.steps, 1000))
+    key = jax.random.PRNGKey(args.seed)
+    data = SyntheticLM(cfg.vocab_size, args.seq_len, args.global_batch,
+                       seed=args.seed)
+
+    def loss_fn(p, b, s, exps):
+        return T.loss_fn(cfg, policy, p, b, exps, s)
+
+    # --- calibration (paper §9.3), then reinitialize ------------------------
+    init_exp = -8.0
+    if policy.dynamic and args.calibrate_steps:
+        obs_policy = dataclasses.replace(policy, arithmetic="observe",
+                                         storage="sim")
+
+        def obs_loss(p, b, s, exps):
+            return T.loss_fn(cfg, obs_policy, p, b, exps, s)
+
+        params0 = T.init_params(cfg, key)
+        batches = ( {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+                    for i in range(args.calibrate_steps))
+        init_exp = calibrate(obs_loss, params0, gs, policy, opt_cfg,
+                             batches, steps=args.calibrate_steps)
+        print(f"calibrated {len(init_exp)} scale groups")
+
+    params = T.init_params(cfg, jax.random.fold_in(key, 1))
+    state = init_train_state(params, sgd_init(params) if
+                             args.optimizer == "sgd" else
+                             __import__("repro.optim.opt",
+                                        fromlist=["adamw_init"]).adamw_init(
+                                            params),
+                             gs, policy, init_exp=init_exp)
+
+    step_fn = jax.jit(make_train_step(loss_fn, gs, policy, opt_cfg,
+                                      microbatches=args.microbatches))
+
+    # --- checkpoint / resume -------------------------------------------------
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and mgr.latest() is not None:
+        state = mgr.restore(state)
+        start = int(state.step)
+        print(f"resumed from step {start}")
+
+    stop = {"now": False}
+
+    def _preempt(signum, frame):
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, _preempt)
+    signal.signal(signal.SIGINT, _preempt)
+
+    # --- loop -----------------------------------------------------------------
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        state, metrics = step_fn(state, batch, jax.random.fold_in(key, i))
+        if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+            print(f"step {i+1}: loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)", flush=True)
+        if mgr and ((i + 1) % args.ckpt_every == 0):
+            mgr.save_async(i + 1, state)
+        if stop["now"]:
+            print(f"preempted at step {i+1}: writing final checkpoint")
+            if mgr:
+                mgr.wait()
+                mgr.save(i + 1, state)
+            sys.exit(143)
+    if mgr:
+        mgr.wait()
+        mgr.save(args.steps, state)
+    print("done")
+    return state
+
+
+if __name__ == "__main__":
+    main()

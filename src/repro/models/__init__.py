@@ -1,0 +1,3 @@
+"""Model zoo: unified transformer (dense/MoE/SSM/hybrid/enc-dec) + maxout."""
+from . import layers, maxout, moe, ssm, transformer  # noqa: F401
+from .transformer import ModelConfig, build_stages, group_shapes  # noqa: F401

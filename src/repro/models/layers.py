@@ -1,0 +1,369 @@
+"""Shared neural-net layers, quantization-aware (tape-threaded).
+
+Every weighted sum goes through ``tape.dot`` (weight re-quantized to the
+computation width at use time, wide f32 accumulation — the paper's §7
+accumulator hypothesis == the TPU MXU contract) and every group boundary
+through ``tape.act`` (forward value + backward cotangent quantized, overflow
+stats recorded). With a float32 policy all of it is the identity.
+
+Attention comes in three shapes:
+  * ``attention_train``  — naive masked scores (seq ≤ ~8k; remat-friendly).
+  * ``attention_prefill`` — online-softmax scan over KV chunks (no-grad
+    inference path; peak memory ∝ chunk, required for 32k prefill).
+  * ``attention_decode`` — single-query against a cache (O(S) memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tape import QTape
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, scale: Optional[float] = None) -> Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return jnp.exp(
+        -jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+        * jnp.log(jnp.float32(theta))
+    )  # [hd/2]
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> Array:
+    """``x``: [B, S, H, hd]. ``positions``: [B, S] or [3, B, S] for M-RoPE.
+
+    M-RoPE (qwen2-vl): frequency dims are partitioned into (temporal, height,
+    width) sections, each rotated by its own position stream.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if positions.ndim == 3:  # M-RoPE
+        if not mrope_sections:
+            mrope_sections = (hd // 2,)
+        sec_ids = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.asarray(mrope_sections),
+            total_repeat_length=hd // 2,
+        )  # [hd/2] -> which position stream each freq dim uses
+        pos = positions[sec_ids]                       # [hd/2, B, S]
+        angle = jnp.einsum("fbs,f->bsf", pos.astype(jnp.float32), freqs)
+    else:
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    mrope_sections: Tuple[int, ...] = ()
+    causal: bool = True
+    use_rope: bool = True
+
+    @property
+    def q_dim(self):
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.num_kv_heads * self.head_dim
+
+
+def init_attn(key, spec: AttnSpec) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], spec.d_model, spec.q_dim),
+        "wk": init_dense(ks[1], spec.d_model, spec.kv_dim),
+        "wv": init_dense(ks[2], spec.d_model, spec.kv_dim),
+        "wo": init_dense(ks[3], spec.q_dim, spec.d_model),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((spec.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((spec.head_dim,), jnp.float32)
+    return p
+
+
+def _qkv(params, spec: AttnSpec, x: Array, positions, tape: QTape, prefix: str):
+    B, S, _ = x.shape
+    q = tape.dot(f"{prefix}/wq", x, params["wq"]).reshape(
+        B, S, spec.num_heads, spec.head_dim)
+    k = tape.dot(f"{prefix}/wk", x, params["wk"]).reshape(
+        B, S, spec.num_kv_heads, spec.head_dim)
+    v = tape.dot(f"{prefix}/wv", x, params["wv"]).reshape(
+        B, S, spec.num_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta, spec.mrope_sections)
+        k = apply_rope(k, positions, spec.rope_theta, spec.mrope_sections)
+    q = tape.act(f"{prefix}/qkv", q)
+    k = tape.act(f"{prefix}/k", k)
+    v = tape.act(f"{prefix}/v", v)
+    return q, k, v
+
+
+def _mask(q_pos: Array, k_pos: Array, window, causal: bool) -> Array:
+    """[.., Sq, Sk] boolean validity mask. window==0 means global."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = (d >= 0) if causal else jnp.ones(d.shape, bool)
+    if window is not None:
+        w = jnp.asarray(window)
+        m = m & ((w == 0) | (d < w))
+    return m
+
+
+def _sdpa(q, k, v, mask, scale) -> Array:
+    """Naive scores; f32 softmax; GQA via head-group reshape."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_train(params, spec: AttnSpec, x: Array, positions: Array,
+                    tape: QTape, prefix: str, window=None,
+                    kv_source: Optional[Array] = None,
+                    kv_positions: Optional[Array] = None) -> Array:
+    """Training-path attention (naive masked). ``kv_source`` → cross-attn."""
+    B, S, _ = x.shape
+    if kv_source is None:
+        q, k, v = _qkv(params, spec, x, positions, tape, prefix)
+        k_pos = positions
+        causal = spec.causal
+    else:
+        q = tape.dot(f"{prefix}/wq", x, params["wq"]).reshape(
+            B, S, spec.num_heads, spec.head_dim)
+        Sk = kv_source.shape[1]
+        k = tape.dot(f"{prefix}/wk", kv_source, params["wk"]).reshape(
+            B, Sk, spec.num_kv_heads, spec.head_dim)
+        v = tape.dot(f"{prefix}/wv", kv_source, params["wv"]).reshape(
+            B, Sk, spec.num_kv_heads, spec.head_dim)
+        q = tape.act(f"{prefix}/qkv", q)
+        k = tape.act(f"{prefix}/k", k)
+        v = tape.act(f"{prefix}/v", v)
+        k_pos = (kv_positions if kv_positions is not None
+                 else jnp.broadcast_to(jnp.arange(Sk), (B, Sk)))
+        causal = False
+
+    q_pos = positions if positions.ndim == 2 else positions[0]
+    k_pos2 = k_pos if k_pos.ndim == 2 else k_pos[0]
+    mask = _mask(q_pos, k_pos2, window, causal)
+    o = _sdpa(q, k, v, mask, 1.0 / math.sqrt(spec.head_dim))
+    o = o.reshape(B, S, spec.q_dim)
+    y = tape.dot(f"{prefix}/wo", o, params["wo"])
+    return tape.act(f"{prefix}/out", y)
+
+
+def attention_prefill(params, spec: AttnSpec, x: Array, positions: Array,
+                      tape: QTape, prefix: str, window=None,
+                      chunk: int = 1024):
+    """Inference prefill: online-softmax over KV chunks; returns (y, (k, v)).
+
+    Peak memory ∝ ``Sq × chunk`` instead of ``Sq × Sk`` — required for the
+    32k/500k shapes. No autodiff support (inference only).
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, spec, x, positions, tape, prefix)
+    H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = positions if positions.ndim == 2 else positions[0]
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # pad positions must be invalid under the causal mask → large positive
+    pos_p = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    kc = kp.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    pc = pos_p.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    qg = q.reshape(B, S, K, G, hd)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kci, vci, pci = xs
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, kci,
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask(q_pos, pci, window, spec.causal)  # [B, S, chunk]
+        vexp = valid[:, None, None, :, :]
+        s = jnp.where(vexp, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # fully-masked chunks: exp(-1e30 - (-1e30)) = 1 would leak — zero it
+        p = jnp.where(vexp, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p, vci.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, spec.q_dim).astype(x.dtype)
+    y = tape.dot(f"{prefix}/wo", o, params["wo"])
+    return tape.act(f"{prefix}/out", y), (k, v)
+
+
+def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
+                     cache_k: Array, cache_v: Array, cache_pos: Array,
+                     tape: QTape, prefix: str, window=None):
+    """One-token decode. ``x``: [B, 1, D]; cache: [B, W, K, hd] (ring buffer).
+
+    Writes the new token's K/V into slot ``pos % W`` (so the token attends to
+    itself), then attends over the whole buffer with a position-validity
+    mask. Returns ``(y, cache_k', cache_v', cache_pos')``.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)) if jnp.ndim(pos) == 0 else pos
+    q, k_new, v_new = _qkv(params, spec, x, positions, tape, prefix)
+    W = cache_k.shape[1]
+    slot = (positions[:, 0] % W).astype(jnp.int32)          # [B]
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k_new[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v_new[:, 0])
+    cache_pos = cache_pos.at[bidx, slot].set(positions[:, 0])
+    H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, 1, K, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = positions if positions.ndim == 2 else positions[0]
+    valid = _mask(q_pos, cache_pos, window, spec.causal)  # [B, 1, W]
+    valid = valid & (cache_pos >= 0)[:, None, :]          # -1 = empty slot
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, cache_v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
+    y = tape.dot(f"{prefix}/wo", o, params["wo"])
+    return tape.act(f"{prefix}/out", y), cache_k, cache_v, cache_pos
+
+
+# ---------------------------------------------------------------------------
+# feed-forward variants
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d_model, d_ff),
+        "w_up": init_dense(k2, d_model, d_ff),
+        "w_down": init_dense(k3, d_ff, d_model),
+    }
+
+
+def swiglu(params, x: Array, tape: QTape, prefix: str) -> Array:
+    g = tape.dot(f"{prefix}/w_gate", x, params["w_gate"])
+    u = tape.dot(f"{prefix}/w_up", x, params["w_up"])
+    h = tape.act(f"{prefix}/pre", jax.nn.silu(g) * u)
+    y = tape.dot(f"{prefix}/w_down", h, params["w_down"])
+    return tape.act(f"{prefix}/out", y)
+
+
+def init_gelu_ffn(key, d_model: int, d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_in": init_dense(k1, d_model, d_ff),
+            "w_out": init_dense(k2, d_ff, d_model),
+            "b_in": jnp.zeros((d_ff,), jnp.float32),
+            "b_out": jnp.zeros((d_model,), jnp.float32)}
+
+
+def gelu_ffn(params, x: Array, tape: QTape, prefix: str) -> Array:
+    h = tape.dot(f"{prefix}/w_in", x, params["w_in"]) + params["b_in"]
+    h = tape.act(f"{prefix}/pre", jax.nn.gelu(h))
+    y = tape.dot(f"{prefix}/w_out", h, params["w_out"]) + params["b_out"]
+    return tape.act(f"{prefix}/out", y)
+
+
+def init_maxout(key, d_in: int, d_out: int, k: int) -> dict:
+    """Maxout unit (paper §2): max over k affine maps."""
+    kw, = jax.random.split(key, 1)
+    return {"w": jax.random.normal(kw, (k, d_in, d_out), jnp.float32)
+            / math.sqrt(d_in),
+            "b": jnp.zeros((k, d_out), jnp.float32)}
+
+
+def maxout(params, x: Array, tape: QTape, prefix: str) -> Array:
+    """h_i = max_j (b_ij + w_ij · x) — the paper's hidden unit."""
+    k = params["w"].shape[0]
+    outs = []
+    for j in range(k):
+        z = tape.dot(f"{prefix}/w", x, params["w"][j]) + params["b"][j]
+        outs.append(z)
+    h = jnp.max(jnp.stack(outs, axis=0), axis=0)
+    return tape.act(f"{prefix}/out", h)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int) -> Array:
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def embed(table: Array, tokens: Array, tape: QTape) -> Array:
+    t = tape.weight("emb/w", table)
+    return tape.act("emb/out", jnp.take(t, tokens, axis=0))
+
+
+def lm_head(table_or_w: Array, x: Array, tape: QTape, *, tied: bool) -> Array:
+    w = tape.weight("head/w", table_or_w)
+    if tied:
+        logits = jnp.einsum("bsd,vd->bsv", x, w,
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w,
+                            preferred_element_type=jnp.float32)
+    return tape.act("head/logits", logits.astype(x.dtype))

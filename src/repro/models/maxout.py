@@ -1,0 +1,174 @@
+"""Paper-faithful Maxout networks (paper §2, §8; Goodfellow et al. 2013a).
+
+Two model shapes, as in the paper:
+  * permutation-invariant MLP — maxout hidden layers on flat inputs
+    (paper's PI-MNIST model: 2 maxout layers + softmax),
+  * convolutional maxout — conv layers whose channels are maxed over k
+    pieces, with spatial max pooling, + dense softmax (MNIST/CIFAR10/SVHN).
+
+Regularization follows the paper: dropout (input + hidden) and a max-norm
+constraint on each weight column (Srebro & Shraibman 2005), the latter
+applied in the optimizer (`repro.optim.apply_max_norm`). The training
+recipe (SGD, linearly decaying LR, linearly saturating momentum) lives in
+`repro.optim.schedules`.
+
+Every weighted sum/output is a DFXP quantization site — these are exactly
+the paper's per-layer groups (weights, biases, weighted sums, outputs and
+their gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.tape import QTape
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxoutConfig:
+    name: str = "maxout_pi"
+    input_dim: int = 784             # flat input (PI) or C*H*W (conv)
+    image_shape: Tuple[int, int, int] = (1, 28, 28)   # (C, H, W), conv only
+    num_classes: int = 10
+    hidden: Tuple[int, ...] = (240, 240)
+    pieces: int = 5                  # k linear pieces per maxout unit
+    conv: bool = False
+    conv_channels: Tuple[int, ...] = (48, 48, 24)
+    conv_kernel: int = 5
+    pool: int = 2
+    dropout_input: float = 0.2
+    dropout_hidden: float = 0.5
+    max_col_norm: float = 1.9365     # pylearn2 default used by the paper
+
+
+def init_params(cfg: MaxoutConfig, key) -> dict:
+    params = {}
+    if cfg.conv:
+        C = cfg.image_shape[0]
+        for i, ch in enumerate(cfg.conv_channels):
+            key, k = jax.random.split(key)
+            fan_in = C * cfg.conv_kernel ** 2
+            params[f"conv{i}"] = {
+                "w": jax.random.normal(
+                    k, (cfg.pieces * ch, C, cfg.conv_kernel, cfg.conv_kernel),
+                    jnp.float32) / math.sqrt(fan_in),
+                "b": jnp.zeros((cfg.pieces * ch,), jnp.float32),
+            }
+            C = ch
+        key, k = jax.random.split(key)
+        feat = _conv_out_dim(cfg)
+        params["out"] = {
+            "w": jax.random.normal(k, (feat, cfg.num_classes), jnp.float32)
+            / math.sqrt(feat),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+        }
+    else:
+        d = cfg.input_dim
+        for i, h in enumerate(cfg.hidden):
+            key, k = jax.random.split(key)
+            params[f"fc{i}"] = {
+                "w": jax.random.normal(k, (d, cfg.pieces * h), jnp.float32)
+                / math.sqrt(d),
+                "b": jnp.zeros((cfg.pieces * h,), jnp.float32),
+            }
+            d = h
+        key, k = jax.random.split(key)
+        params["out"] = {
+            "w": jax.random.normal(k, (d, cfg.num_classes), jnp.float32)
+            / math.sqrt(d),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+        }
+    return params
+
+
+def _conv_out_dim(cfg: MaxoutConfig) -> int:
+    _, H, W = cfg.image_shape
+    for _ in cfg.conv_channels:
+        H, W = H // cfg.pool, W // cfg.pool
+    return cfg.conv_channels[-1] * H * W
+
+
+def group_shapes(cfg: MaxoutConfig) -> dict:
+    groups = {}
+    names = ([f"conv{i}" for i in range(len(cfg.conv_channels))]
+             if cfg.conv else [f"fc{i}" for i in range(len(cfg.hidden))])
+    for n in names + ["out"]:
+        groups[f"w:{n}/w"] = ()
+        for s in ("pre", "act"):
+            groups[f"a:{n}/{s}"] = ()
+            groups[f"g:{n}/{s}"] = ()
+    return groups
+
+
+def _dropout(x, rate, key):
+    if key is None or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def forward(cfg: MaxoutConfig, policy: PrecisionPolicy, params, x: Array,
+            scales, sinks, *, rng: Optional[Array] = None):
+    """``x``: [B, input_dim] (PI) or [B, C, H, W] (conv). rng=None → eval."""
+    tape = QTape(policy, scales, sinks)
+    if rng is not None:
+        rng, k = jax.random.split(rng)
+        x = _dropout(x, cfg.dropout_input, k)
+
+    if cfg.conv:
+        for i, ch in enumerate(cfg.conv_channels):
+            p = params[f"conv{i}"]
+            w = tape.weight(f"conv{i}/w", p["w"])
+            z = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            z = z + p["b"][None, :, None, None]
+            z = tape.act(f"conv{i}/pre", z)
+            B, _, H, W = z.shape
+            z = z.reshape(B, cfg.pieces, ch, H, W).max(axis=1)  # maxout
+            z = jax.lax.reduce_window(
+                z, -jnp.inf, jax.lax.max,
+                (1, 1, cfg.pool, cfg.pool), (1, 1, cfg.pool, cfg.pool),
+                "VALID")
+            z = tape.act(f"conv{i}/act", z)
+            if rng is not None:
+                rng, k = jax.random.split(rng)
+                z = _dropout(z, cfg.dropout_hidden, k)
+            x = z
+        x = x.reshape(x.shape[0], -1)
+    else:
+        for i, h in enumerate(cfg.hidden):
+            p = params[f"fc{i}"]
+            z = tape.dot(f"fc{i}/w", x, p["w"]) + p["b"]
+            z = tape.act(f"fc{i}/pre", z)
+            z = z.reshape(z.shape[0], cfg.pieces, h).max(axis=1)   # maxout
+            z = tape.act(f"fc{i}/act", z)
+            if rng is not None:
+                rng, k = jax.random.split(rng)
+                z = _dropout(z, cfg.dropout_hidden, k)
+            x = z
+
+    p = params["out"]
+    logits = tape.dot("out/w", x, p["w"]) + p["b"]
+    logits = tape.act("out/pre", logits)
+    return logits, tape.stats
+
+
+def loss_fn(cfg, policy, params, batch, scales, sinks, rng=None):
+    logits, stats = forward(cfg, policy, params, batch["x"], scales, sinks,
+                            rng=rng)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return -ll.mean(), stats
+
+
+def accuracy(cfg, policy, params, batch, scales, sinks) -> Array:
+    logits, _ = forward(cfg, policy, params, batch["x"], scales, sinks)
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()

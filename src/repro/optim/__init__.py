@@ -1,0 +1,14 @@
+"""Optimizers + schedules (paper: SGD, linear-decay LR, saturating momentum)."""
+from .opt import (  # noqa: F401
+    AdamWState,
+    OptConfig,
+    SGDState,
+    adamw_init,
+    adamw_update,
+    apply_max_norm,
+    global_norm,
+    lr_at,
+    momentum_at,
+    sgd_init,
+    sgd_update,
+)

@@ -1,0 +1,119 @@
+"""Optimizers, faithful to the paper's recipe (§8.1) + AdamW for LM configs.
+
+Paper recipe: minibatch SGD with a *linearly decaying learning rate*, a
+*linearly saturating momentum*, dropout, and a max-norm constraint on each
+weight column (Srebro & Shraibman 2005). All pure functions over pytrees —
+no optax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "sgd"              # sgd|adamw
+    lr: float = 0.05
+    # paper schedules
+    lr_decay_steps: int = 10_000   # linear decay horizon
+    lr_min_factor: float = 0.01
+    momentum_init: float = 0.5
+    momentum_final: float = 0.7
+    momentum_sat_steps: int = 2_000
+    # adamw
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # constraints
+    max_col_norm: float = 0.0      # 0 = off (paper maxout: 1.9365)
+    grad_clip: float = 0.0         # global-norm clip, 0 = off
+
+
+def lr_at(cfg: OptConfig, step: Array) -> Array:
+    frac = 1.0 - step.astype(jnp.float32) / cfg.lr_decay_steps
+    return cfg.lr * jnp.clip(frac, cfg.lr_min_factor, 1.0)
+
+
+def momentum_at(cfg: OptConfig, step: Array) -> Array:
+    t = jnp.clip(step.astype(jnp.float32) / cfg.momentum_sat_steps, 0.0, 1.0)
+    return cfg.momentum_init + (cfg.momentum_final - cfg.momentum_init) * t
+
+
+SGDState = Dict[str, Any]     # {"momentum": pytree}
+AdamWState = Dict[str, Any]   # {"m": pytree, "v": pytree}
+
+
+def sgd_init(params) -> SGDState:
+    return {"momentum": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(cfg: OptConfig, grads, state: SGDState, step: Array):
+    """Returns (updates, new_state). updates are *deltas* to add to params."""
+    lr = lr_at(cfg, step)
+    mom = momentum_at(cfg, step)
+    new_m = jax.tree.map(lambda m, g: mom * m + g, state["momentum"], grads)
+    updates = jax.tree.map(lambda m: -lr * m, new_m)
+    return updates, {"momentum": new_m}
+
+
+def adamw_init(params) -> AdamWState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def adamw_update(cfg: OptConfig, grads, state: AdamWState, step: Array,
+                 params=None):
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    c1, c2 = 1 - b1 ** t, 1 - b2 ** t
+    def upd(mi, vi, pi):
+        u = -(lr * (mi / c1) / (jnp.sqrt(vi / c2) + cfg.eps))
+        if cfg.weight_decay and pi is not None:
+            u = u - lr * cfg.weight_decay * pi
+        return u
+    if params is None:
+        updates = jax.tree.map(lambda mi, vi: upd(mi, vi, None), m, v)
+    else:
+        updates = jax.tree.map(upd, m, v, params)
+    return updates, {"m": m, "v": v}
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), n
+
+
+def apply_max_norm(params, max_col_norm: float):
+    """Paper's max-norm constraint: clip each weight column's L2 norm.
+
+    Applied to every rank-2+ leaf whose last-1 axis indexes output columns
+    (the convention of all our dense/maxout weights).
+    """
+    if not max_col_norm:
+        return params
+
+    def clip(x):
+        if x.ndim < 2:
+            return x
+        axes = tuple(range(x.ndim - 1))
+        norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=axes, keepdims=True))
+        scale = jnp.minimum(1.0, max_col_norm / jnp.maximum(norms, 1e-9))
+        return x * scale
+
+    return jax.tree.map(clip, params)

@@ -1,0 +1,105 @@
+"""Scale calibration (paper §9.3): "We find the initial scaling factors by
+training with a higher precision format. Once those scaling factors are
+found, we reinitialize the model parameters."
+
+Runs K steps with the ``observe`` pseudo-arithmetic (fp32 math; every
+quantization site records ``max|value|`` through the same tape/sink
+machinery), takes the running max per group, and converts magnitudes to
+initial log2-step exponents with one headroom bit. The online controller
+then only has to track drift (gradients shrinking over training — paper
+§10), not find 20 bits of scale from nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.scale import calibrate_exp
+from repro.optim.opt import OptConfig, sgd_update
+
+from .state import _bexp, param_group_shapes, unpack_tree
+from .step import _map_with_group
+
+Array = jax.Array
+
+
+def observe_policy(policy: PrecisionPolicy) -> PrecisionPolicy:
+    return dataclasses.replace(policy, arithmetic="observe", storage="sim")
+
+
+def make_observe_step(loss_fn: Callable, group_shapes: Dict[str, tuple],
+                      opt_cfg: OptConfig):
+    """One fp32 SGD step that also returns per-group max-|value| stats."""
+
+    def step(params, mom, opt_step, batch, exps):
+        sinks = {n: jnp.zeros(s + (3,), jnp.float32)
+                 for n, s in group_shapes.items() if n.startswith("g:")}
+        grad_fn = jax.value_and_grad(
+            lambda p, s: loss_fn(p, batch, s, exps), argnums=(0, 1),
+            has_aux=True)
+        (loss, fwd_stats), (grads, sink_stats) = grad_fn(params, sinks)
+
+        def obs(x, e, name):
+            ax = jnp.abs(x.astype(jnp.float32))
+            axes = tuple(range(jnp.ndim(e), x.ndim))
+            mx = jnp.max(ax, axis=axes) if axes else ax
+            z = jnp.zeros_like(mx)
+            return x, jnp.stack([mx, z, z + 1.0], axis=-1)
+
+        _, gstats = _map_with_group(obs, grads, {**{
+            k: jnp.zeros(v) for k, v in group_shapes.items()
+            if k.startswith("pg:")}}, "pg:")
+        updates, new_momd = sgd_update(opt_cfg, grads, mom, opt_step)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        _, pstats = _map_with_group(obs, new_params, {**{
+            k: jnp.zeros(v) for k, v in group_shapes.items()
+            if k.startswith("p:")}}, "p:")
+        _, mstats = _map_with_group(obs, new_momd["momentum"], {**{
+            k: jnp.zeros(v) for k, v in group_shapes.items()
+            if k.startswith("pm:")}}, "pm:")
+
+        stats = {}
+        for d in (fwd_stats, sink_stats, gstats, pstats, mstats):
+            for k, v in d.items():
+                stats[k] = jnp.maximum(stats.get(k, 0.0), v[..., 0])
+        return new_params, new_momd, loss, stats
+
+    return step
+
+
+def calibrate(loss_fn: Callable, params, group_shapes: Dict[str, tuple],
+              policy: PrecisionPolicy, opt_cfg: OptConfig, batches,
+              *, steps: int = 10) -> Dict[str, Array]:
+    """Run K observe-steps over ``batches`` → per-group init exponents."""
+    all_groups = dict(group_shapes)
+    all_groups.update(param_group_shapes(params))
+    obs_pol = observe_policy(policy)
+    del obs_pol  # caller's loss_fn must already close over observe policy
+    step = jax.jit(make_observe_step(loss_fn, all_groups, opt_cfg))
+    mom = {"momentum": jax.tree.map(jnp.zeros_like, params)}
+    exps0 = {n: jnp.zeros(s, jnp.float32) for n, s in all_groups.items()}
+
+    maxes: Dict[str, Array] = {}
+    it = iter(batches)
+    for i in range(steps):
+        batch = next(it)
+        params, mom, loss, stats = step(params, mom, jnp.int32(i), batch,
+                                        exps0)
+        for k, v in stats.items():
+            maxes[k] = jnp.maximum(maxes.get(k, 0.0), v)
+
+    init_exp: Dict[str, Array] = {}
+    for name, shape in all_groups.items():
+        width = (policy.update_width if name.startswith(("p:", "pm:"))
+                 else policy.comp_width)
+        mx = maxes.get(name)
+        if mx is None:
+            init_exp[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            init_exp[name] = jnp.broadcast_to(
+                calibrate_exp(mx, width, margin_bits=1), shape)
+    return init_exp

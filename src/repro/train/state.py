@@ -1,0 +1,113 @@
+"""TrainState: parameters (+optional packed storage), optimizer, DFXP scales.
+
+Parameter-storage quantization groups (paper §6's "Up." bit-width) are
+derived from the parameter pytree itself:
+  * ``p:<path>``  — parameter storage scale (update width),
+  * ``pg:<path>`` — weight-gradient scale (computation width),
+  * ``pm:<path>`` — momentum/optimizer-state scale (update width).
+Stacked per-layer leaves (under a stage's ``stacked`` subtree) get one scale
+*per layer* (leading axis), mirroring the paper's per-layer groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import PackedArray, pack
+from repro.core.policy import PrecisionPolicy
+from repro.core.scale import ScaleState
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any                    # f32 pytree (sim) | PackedArray pytree
+    opt: Any                       # optimizer state (matching storage)
+    scale: ScaleState
+    step: Array                    # int32 scalar
+
+    def num_params(self) -> int:
+        return sum(
+            (x.size for x in jax.tree.leaves(
+                self.params, is_leaf=lambda n: isinstance(n, PackedArray))))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_leaf_groups(params) -> Dict[str, tuple]:
+    """Map each param leaf path -> scale-group shape (per-layer if stacked)."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = _path_str(path)
+        stacked = "stacked" in name
+        out[name] = (leaf.shape[0],) if (stacked and leaf.ndim > 0) else ()
+    return out
+
+
+def param_group_shapes(params) -> Dict[str, tuple]:
+    shapes = {}
+    for name, shape in param_leaf_groups(params).items():
+        shapes[f"p:{name}"] = shape
+        shapes[f"pg:{name}"] = shape
+        shapes[f"pm:{name}"] = shape
+    return shapes
+
+
+def init_train_state(params, opt_state, model_groups: Dict[str, tuple],
+                     policy: PrecisionPolicy,
+                     init_exp: float | Dict[str, float] = -8.0) -> TrainState:
+    groups = dict(model_groups)
+    groups.update(param_group_shapes(params))
+    scale = ScaleState.create(groups, init_exp)
+    if policy.storage == "packed":
+        params = pack_tree(params, scale, "p:", policy.update_width)
+        opt_state = pack_tree(opt_state, scale, "pm:", policy.update_width,
+                              strip_prefix=1)
+    elif policy.arithmetic in ("fixed", "dfxp"):
+        # paper: parameters live at the update width from step 0 (packed
+        # mode gets this from pack(); sim mode quantizes in place)
+        def q(path, leaf):
+            e = scale.exps[f"p:{_path_str(path)}"]
+            from repro.train.step import quantize_param
+            return quantize_param(leaf, policy.update_width, e)[0]
+        params = jax.tree_util.tree_map_with_path(q, params)
+    return TrainState(params=params, opt=opt_state, scale=scale,
+                      step=jnp.int32(0))
+
+
+def pack_tree(tree, scale: ScaleState, prefix: str, width: int,
+              strip_prefix: int = 0):
+    """Pack every leaf into a PackedArray using its group's exponent."""
+    def pack_leaf(path, leaf):
+        name = _path_str(path[strip_prefix:] if strip_prefix else path)
+        e = scale.exps[f"{prefix}{name}"]
+        return pack(leaf, width, _bexp(e, leaf))
+    return jax.tree_util.tree_map_with_path(pack_leaf, tree)
+
+
+def unpack_tree(tree, dtype=jnp.float32):
+    from repro.core.packed import unpack
+    return jax.tree.map(
+        lambda x: unpack(x, dtype) if isinstance(x, PackedArray) else x,
+        tree, is_leaf=lambda x: isinstance(x, PackedArray))
+
+
+def _bexp(e: Array, x) -> Array:
+    """Broadcast a per-layer exponent [L] against a stacked leaf [L, ...]."""
+    e = jnp.asarray(e, jnp.float32)
+    if e.ndim == 0:
+        return e
+    return e.reshape(e.shape + (1,) * (x.ndim - e.ndim))

@@ -1,0 +1,246 @@
+"""The DFXP train step (paper §5-§7, end to end).
+
+Order of operations per step (all inside one jit program):
+  1. microbatch ``lax.scan``: forward/backward with quantized activations &
+     backprop signals (model-side qbound sites); accumulate mean grads,
+     forward overflow stats, and sink cotangents (gradient overflow stats);
+  2. optional global-norm clip;
+  3. quantize accumulated weight gradients at the computation width
+     (``pg:`` groups — these are the paper's "gradient" groups);
+  4. optimizer math in f32 (wide accumulator hypothesis);
+  5. quantize new parameters (and momentum) at the update width
+     (``p:``/``pm:`` groups — the paper's 12-bit parameter updates),
+     optionally with stochastic rounding (beyond-paper);
+  6. max-norm constraint (paper's maxout recipe);
+  7. feed every group's statistics to the overflow-rate controller; apply
+     the scale-update rule every ``policy.update_interval`` steps.
+
+In ``packed`` storage mode, parameters/momentum live as int-mantissa
+``PackedArray``s; step 4 unpacks per-leaf (elementwise, fuses) and step 5
+re-packs, so wide master copies never persist in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import PackedArray, pack
+from repro.core.policy import PrecisionPolicy
+from repro.core.quant import exact_pow2
+from repro.core.scale import accumulate, controller_step
+from repro.optim.opt import (OptConfig, adamw_update, apply_max_norm,
+                             clip_by_global_norm, global_norm, sgd_update)
+
+from .state import TrainState, _bexp, _path_str, unpack_tree
+
+Array = jax.Array
+
+
+def quantize_param(x: Array, width: int, e: Array, *, stochastic_key=None):
+    """Quantize a parameter/gradient leaf; per-layer stats if ``e`` is [L].
+
+    Returns (y, stats) with stats shaped ``e.shape + (3,)``.
+    """
+    eb = _bexp(e, x)
+    step = exact_pow2(eb)
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    m = x.astype(jnp.float32) / step
+    if stochastic_key is not None:
+        u = jax.random.uniform(stochastic_key, m.shape, jnp.float32)
+        m_r = jnp.floor(m + u)
+    else:
+        m_r = jnp.round(m)
+    over = (m_r > qmax) | (m_r < qmin)
+    over_h = (m_r > qmax / 2) | (m_r < qmin / 2)
+    axes = tuple(range(jnp.ndim(e), x.ndim))
+    ovf = jnp.sum(over, axis=axes, dtype=jnp.float32)
+    ovfh = jnp.sum(over_h, axis=axes, dtype=jnp.float32)
+    total = jnp.broadcast_to(
+        jnp.float32(x.size / max(1, int(jnp.size(e)))), ovf.shape)
+    y = (jnp.clip(m_r, qmin, qmax) * step).astype(x.dtype)
+    return y, jnp.stack([ovf, ovfh, total], axis=-1)
+
+
+def _map_with_group(fn, tree, exps: Dict[str, Array], prefix: str,
+                    is_packed=False):
+    """tree_map with the leaf's scale group exponent. Returns (tree', stats)."""
+    stats: Dict[str, Array] = {}
+
+    def apply(path, leaf):
+        name = _path_str(path)
+        e = exps[f"{prefix}{name}"]
+        out, st = fn(leaf, e, name)
+        stats[f"{prefix}{name}"] = st
+        return out
+
+    leaf_fn = (lambda x: isinstance(x, PackedArray)) if is_packed else None
+    out = jax.tree_util.tree_map_with_path(apply, tree, is_leaf=leaf_fn)
+    return out, stats
+
+
+def make_train_step(
+    loss_fn: Callable,            # (params, batch, sinks, exps) -> (loss, stats)
+    group_shapes: Dict[str, tuple],
+    policy: PrecisionPolicy,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    compute_dtype=jnp.float32,
+    grad_transform: Optional[Callable] = None,   # e.g. DFXP compression
+):
+    """Build ``step(state, batch, rng) -> (state, metrics)``."""
+    comp_fmt = policy.comp_format()
+    dyn = policy.dynamic
+    quant_params = policy.enabled and policy.arithmetic in ("fixed", "dfxp")
+
+    def step(state: TrainState, batch, rng: Array):
+        sinks = {n: jnp.zeros(s + (3,), jnp.float32)
+                 for n, s in group_shapes.items() if n.startswith("g:")}
+
+        # ---- unpack storage (packed mode) --------------------------------
+        if policy.storage == "packed":
+            params_c = unpack_tree(state.params, compute_dtype)
+            mom_c = unpack_tree(state.opt, jnp.float32)
+        else:
+            params_c = state.params
+            mom_c = state.opt
+
+        # ---- grads over microbatches --------------------------------------
+        exps = state.scale.exps
+
+        def loss_wrap(p, s, b):
+            return loss_fn(p, b, s, exps)
+
+        grad_fn = jax.value_and_grad(loss_wrap, argnums=(0, 1), has_aux=True)
+
+        if microbatches > 1:
+            for key in ("labels", "y", "tokens", "x"):
+                if key in batch:
+                    B = batch[key].shape[0]
+                    break
+            else:
+                raise ValueError("cannot infer batch axis for microbatching")
+
+            def to_micro(x):
+                if x.shape[0] == B:
+                    return x.reshape((microbatches, B // microbatches)
+                                     + x.shape[1:])
+                # leaves with batch on axis 1 (e.g. M-RoPE positions [3,B,S])
+                assert x.ndim >= 2 and x.shape[1] == B, x.shape
+                y = x.reshape((x.shape[0], microbatches, B // microbatches)
+                              + x.shape[2:])
+                return jnp.moveaxis(y, 1, 0)
+
+            mb = jax.tree.map(to_micro, batch)
+
+            def body(carry, b):
+                (loss_a, g_a, s_a, st_a) = carry
+                (loss, st), (g, gs) = grad_fn(params_c, sinks, b)
+                st_new = {k: st_a[k] + st.get(k, 0.0) for k in st_a}
+                return (loss_a + loss,
+                        jax.tree.map(jnp.add, g_a, g),
+                        jax.tree.map(jnp.add, s_a, gs),
+                        st_new), None
+
+            z_g = jax.tree.map(jnp.zeros_like, params_c)
+            z_s = jax.tree.map(jnp.zeros_like, sinks)
+            st0 = {n: jnp.zeros(s + (3,), jnp.float32)
+                   for n, s in group_shapes.items()
+                   if n.startswith(("a:", "w:"))}
+            (loss, grads, sink_stats, fwd_stats), _ = jax.lax.scan(
+                body, (jnp.float32(0), z_g, z_s, st0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            (loss, fwd_stats), (grads, sink_stats) = grad_fn(params_c, sinks,
+                                                             batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        # ---- gradient processing ------------------------------------------
+        gnorm = global_norm(grads)
+        if opt_cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, opt_cfg.grad_clip)
+
+        all_stats: Dict[str, Array] = {}
+        for d in (fwd_stats, sink_stats):
+            for k, v in d.items():
+                key = k if not k.startswith("g:") else k
+                all_stats[key] = all_stats.get(key, 0) + v
+
+        if quant_params:
+            grads, gstats = _map_with_group(
+                lambda g, e, n: quantize_param(g, policy.comp_width, e),
+                grads, state.scale.exps, "pg:")
+            all_stats.update(gstats)
+
+        # ---- optimizer (wide math) ----------------------------------------
+        if opt_cfg.kind == "sgd":
+            updates, new_opt = sgd_update(opt_cfg, grads, mom_c, state.step)
+        else:
+            updates, new_opt = adamw_update(opt_cfg, grads, mom_c, state.step,
+                                            params=params_c)
+
+        new_params = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                                + u).astype(jnp.float32),
+                                  params_c, updates)
+        if opt_cfg.max_col_norm:
+            new_params = apply_max_norm(new_params, opt_cfg.max_col_norm)
+
+        # ---- parameter/momentum storage quantization ----------------------
+        def q_store(x, e, name, key=None):
+            sk = None
+            if policy.stochastic_rounding:
+                sk = jax.random.fold_in(rng, hash(name) % (2 ** 31))
+            return quantize_param(x, policy.update_width, e,
+                                  stochastic_key=sk)
+
+        if quant_params:
+            if policy.storage == "packed":
+                def pk(x, e, name):
+                    y, st = q_store(x, e, name)
+                    return pack(y, policy.update_width, _bexp(e, y)), st
+                new_params, pstats = _map_with_group(
+                    pk, new_params, state.scale.exps, "p:")
+                all_stats.update(pstats)
+                if policy.quantize_momentum and opt_cfg.kind == "sgd":
+                    new_mom, mstats = _map_with_group(
+                        pk, new_opt["momentum"], state.scale.exps, "pm:")
+                    new_opt = {"momentum": new_mom}
+                    all_stats.update(mstats)
+            else:
+                new_params, pstats = _map_with_group(
+                    q_store, new_params, state.scale.exps, "p:")
+                all_stats.update(pstats)
+                if policy.quantize_momentum and opt_cfg.kind == "sgd":
+                    new_mom, mstats = _map_with_group(
+                        q_store, new_opt["momentum"], state.scale.exps, "pm:")
+                    new_opt = {"momentum": new_mom}
+                    all_stats.update(mstats)
+        elif policy.enabled:
+            # float emulation of the storage format (fp16/bf16/fp8 rows)
+            from repro.core.quant import float_round
+            fmt = policy.update_format()
+            new_params = jax.tree.map(lambda x: float_round(x, fmt),
+                                      new_params)
+
+        # ---- scale controller ----------------------------------------------
+        new_scale = state.scale
+        if dyn:
+            new_scale = accumulate(new_scale, all_stats)
+            apply = (state.step + 1) % policy.update_interval == 0
+            new_scale = controller_step(
+                new_scale, max_overflow_rate=policy.max_overflow_rate,
+                apply=apply)
+
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step.astype(jnp.float32)}
+        return TrainState(params=new_params, opt=new_opt, scale=new_scale,
+                          step=state.step + 1), metrics
+
+    return step

@@ -1,0 +1,260 @@
+"""Unit + property tests for the core quantization machinery (paper §3-§7)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    BFLOAT16,
+    FLOAT8_E4M3,
+    FLOAT16,
+    DynamicFixedPoint,
+    FixedPoint,
+    PrecisionPolicy,
+    ScaleState,
+    accumulate,
+    calibrate_exp,
+    controller_step,
+    fixed_round,
+    float_round,
+    new_sink,
+    pack,
+    q_stats,
+    q_value,
+    qbound,
+    ste_quant,
+    unpack,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+finite_f32 = hnp.arrays(
+    np.float32,
+    st.integers(1, 64),
+    elements=st.floats(-1e4, 1e4, width=32, allow_nan=False, allow_infinity=False),
+)
+
+
+# ---------------------------------------------------------------------------
+# fixed_round properties
+# ---------------------------------------------------------------------------
+
+@given(x=finite_f32, width=st.integers(2, 24), e=st.integers(-20, 5))
+@settings(deadline=None, max_examples=60)
+def test_fixed_round_on_grid_and_bounded(x, width, e):
+    y, (ovf, ovfh) = fixed_round(jnp.asarray(x), width, jnp.float32(e))
+    y = np.asarray(y, np.float64)
+    step = 2.0 ** e
+    qmax, qmin = (2 ** (width - 1) - 1) * step, -(2 ** (width - 1)) * step
+    # every output is an exact grid point within range
+    k = y / step
+    np.testing.assert_allclose(k, np.round(k), atol=0)
+    assert y.max(initial=qmin) <= qmax + 1e-9
+    assert y.min(initial=qmax) >= qmin - 1e-9
+    # error bound: |x - y| <= step/2 for non-overflowing values
+    m = np.round(x.astype(np.float64) / step)
+    inside = (m <= 2 ** (width - 1) - 1) & (m >= -(2 ** (width - 1)))
+    np.testing.assert_array_less(np.abs(x[inside] - y[inside]), step / 2 + 1e-12)
+    # overflow counts match a numpy oracle
+    assert float(ovf) == np.sum(~inside)
+    mh = 2 ** (width - 1) - 1
+    assert float(ovfh) == np.sum((m > mh / 2) | (m < -(2 ** (width - 1)) / 2))
+
+
+@given(x=finite_f32, width=st.integers(3, 16), e=st.integers(-12, 3))
+@settings(deadline=None, max_examples=40)
+def test_fixed_round_idempotent(x, width, e):
+    y1, _ = fixed_round(jnp.asarray(x), width, jnp.float32(e))
+    y2, _ = fixed_round(y1, width, jnp.float32(e))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_fixed_round_stochastic_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((20000,), 0.3)
+    y, _ = fixed_round(x, 8, jnp.float32(0), stochastic=True, key=key)
+    assert abs(float(y.mean()) - 0.3) < 0.02  # E[y] = x
+    assert set(np.unique(np.asarray(y))) <= {0.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# float emulation
+# ---------------------------------------------------------------------------
+
+def test_float_round_fp16_matches_cast():
+    x = jnp.asarray(np.random.RandomState(0).randn(256).astype(np.float32) * 100)
+    np.testing.assert_array_equal(
+        np.asarray(float_round(x, FLOAT16)),
+        np.asarray(x.astype(jnp.float16).astype(jnp.float32)),
+    )
+
+
+def test_float_round_generic_agrees_with_cast_fp16():
+    # the generic (e,m) path should agree with hardware fp16 on normals
+    from repro.core.formats import FloatFormat
+    generic = FloatFormat("generic_fp16", 5, 10)
+    x = jnp.asarray(np.random.RandomState(1).uniform(2**-10, 1e4, 512).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(float_round(x, generic)),
+        np.asarray(x.astype(jnp.float16).astype(jnp.float32)),
+        rtol=0, atol=0,
+    )
+
+
+def test_float8_saturates():
+    y = float_round(jnp.array([1e9, -1e9]), FLOAT8_E4M3)
+    assert float(y[0]) == FLOAT8_E4M3.maxval
+    assert float(y[1]) == -FLOAT8_E4M3.maxval
+
+
+# ---------------------------------------------------------------------------
+# qbound: forward/backward format split + sink statistics
+# ---------------------------------------------------------------------------
+
+def test_qbound_forward_uses_act_format_backward_uses_grad_format():
+    fmt_a, fmt_g = DynamicFixedPoint(8), DynamicFixedPoint(4)
+    x = jnp.array([0.30, 2.0])
+
+    def f(x, sink):
+        y = qbound(x, fmt_a, fmt_g, jnp.float32(-4), jnp.float32(-1), sink)
+        return jnp.sum(y * jnp.array([1.0, 0.3]))
+
+    y = qbound(x, fmt_a, fmt_g, jnp.float32(-4), jnp.float32(-1), new_sink())
+    np.testing.assert_allclose(np.asarray(y), [0.3125, 2.0])  # 8-bit grid @ 2^-4
+    g, s = jax.grad(f, argnums=(0, 1))(x, new_sink())
+    # cotangents (1.0, 0.3) on the 4-bit grid @ 2^-1: 1.0, 0.5
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.5])
+    assert float(s[2]) == 2.0  # n_total
+
+def test_qbound_sink_counts_backward_overflow():
+    fmt = DynamicFixedPoint(8)  # qmax 127
+
+    def f(x, sink):
+        y = qbound(x, fmt, fmt, jnp.float32(0), jnp.float32(0), sink)
+        return jnp.sum(y * jnp.array([1.0, 500.0, 80.0]))
+
+    g, s = jax.grad(f, argnums=(0, 1))(jnp.ones(3), new_sink())
+    assert float(s[0]) == 1.0          # 500 overflows qmax=127
+    assert float(s[1]) == 2.0          # 500 and 80 overflow at half scale
+    assert float(s[2]) == 3.0
+    np.testing.assert_allclose(np.asarray(g), [1.0, 127.0, 80.0])
+
+
+def test_qbound_scan_stacks_per_layer_stats():
+    fmt = DynamicFixedPoint(8)
+
+    def loss(x, sinks):
+        def body(c, s):
+            return qbound(c, fmt, fmt, jnp.float32(-4), jnp.float32(-4), s) * 2.0, None
+        out, _ = jax.lax.scan(body, x, sinks)
+        return jnp.sum(out)
+
+    sinks = jnp.zeros((6, 3))
+    _, gs = jax.jit(jax.grad(loss, argnums=(0, 1)))(jnp.ones(4) * 0.5, sinks)
+    assert gs.shape == (6, 3)
+    np.testing.assert_allclose(np.asarray(gs[:, 2]), 4.0)  # n_total per layer
+
+
+def test_ste_quant_identity_gradient():
+    fmt = DynamicFixedPoint(6)
+    g = jax.grad(lambda w: jnp.sum(ste_quant(w, fmt, jnp.float32(-2)) * 3.0))(
+        jnp.array([0.3, 10.0]))
+    np.testing.assert_allclose(np.asarray(g), [3.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# scale controller (paper §5 rule)
+# ---------------------------------------------------------------------------
+
+def _state(e0=-8.0):
+    return ScaleState.create({"g": ()}, init_exp=e0)
+
+
+def test_controller_raises_scale_on_overflow():
+    st = accumulate(_state(), {"g": jnp.array([50.0, 60.0, 10000.0])})
+    st = controller_step(st, max_overflow_rate=1e-4, apply=jnp.bool_(True))
+    assert float(st.exps["g"]) == -7.0
+    assert float(st.acc["g"][2]) == 0.0  # reset
+
+
+def test_controller_lowers_scale_when_half_safe():
+    st = accumulate(_state(), {"g": jnp.array([0.0, 0.0, 10000.0])})
+    st = controller_step(st, max_overflow_rate=1e-4, apply=jnp.bool_(True))
+    assert float(st.exps["g"]) == -9.0
+
+
+def test_controller_holds_scale_in_band():
+    # no overflow at e, but halving would overflow too much
+    st = accumulate(_state(), {"g": jnp.array([0.0, 50.0, 10000.0])})
+    st = controller_step(st, max_overflow_rate=1e-4, apply=jnp.bool_(True))
+    assert float(st.exps["g"]) == -8.0
+
+
+def test_controller_apply_false_keeps_accumulating():
+    st = accumulate(_state(), {"g": jnp.array([5.0, 5.0, 100.0])})
+    st = controller_step(st, max_overflow_rate=1e-4, apply=jnp.bool_(False))
+    assert float(st.exps["g"]) == -8.0
+    assert float(st.acc["g"][2]) == 100.0
+
+
+def test_controller_converges_on_gaussian():
+    """End-to-end: controller walks the scale to cover a N(0, 100) group."""
+    width = 10
+    fmt = DynamicFixedPoint(width)
+    key = jax.random.PRNGKey(0)
+    st = ScaleState.create({"g": ()}, init_exp=0.0)
+    for i in range(60):
+        key, k = jax.random.split(key)
+        x = jax.random.normal(k, (4096,)) * 100.0
+        st = accumulate(st, {"g": q_stats(x, fmt, st.exps["g"])})
+        st = controller_step(st, max_overflow_rate=1e-3, apply=jnp.bool_(True))
+    e = float(st.exps["g"])
+    # qmax*2^e should sit a bit above ~3.3 sigma = 330: e ~ log2(330/511) ≈ -0.6
+    assert -2.0 <= e <= 1.0
+    # and quantization error is small relative to the signal
+    y = q_value(jax.random.normal(key, (4096,)) * 100.0, fmt, st.exps["g"])
+    x = jax.random.normal(key, (4096,)) * 100.0
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.01
+
+
+def test_calibrate_exp_headroom():
+    e = calibrate_exp(jnp.float32(100.0), width=10, margin_bits=1)
+    qmax = 2 ** 9 - 1
+    assert qmax * 2.0 ** float(e) >= 200.0  # fits with 1 bit margin
+    assert qmax * 2.0 ** (float(e) - 2) < 100.0  # not wastefully wide
+
+
+# ---------------------------------------------------------------------------
+# packed storage
+# ---------------------------------------------------------------------------
+
+@given(e=st.integers(-12, 0), width=st.sampled_from([8, 12, 16]))
+@settings(deadline=None, max_examples=20)
+def test_pack_unpack_roundtrip_on_grid(e, width):
+    step = 2.0 ** e
+    qmax = 2 ** (width - 1) - 1
+    k = np.random.RandomState(0).randint(-qmax, qmax, 128)
+    x = jnp.asarray(k * step, jnp.float32)
+    p = pack(x, width, jnp.float32(e))
+    np.testing.assert_array_equal(np.asarray(unpack(p)), np.asarray(x))
+
+
+def test_pack_container_dtypes():
+    assert pack(jnp.ones(4), 8, jnp.float32(0)).mantissa.dtype == jnp.int8
+    assert pack(jnp.ones(4), 12, jnp.float32(0)).mantissa.dtype == jnp.int16
+    assert pack(jnp.ones(4), 16, jnp.float32(0)).mantissa.dtype == jnp.int16
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        PrecisionPolicy(arithmetic="nope")
+    with pytest.raises(ValueError):
+        PrecisionPolicy(arithmetic="dfxp", comp_width=10, storage="packed",
+                        compute_dtype="bfloat16")  # bf16 holds <=9 bits
+    PrecisionPolicy(arithmetic="dfxp", comp_width=9, storage="packed",
+                    compute_dtype="bfloat16")  # ok

@@ -1,0 +1,113 @@
+"""Dry-run plumbing smoke test on a small forced-device mesh (subprocess so
+the main pytest process keeps 1 device), plus hlo_cost parser checks."""
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.hlo_cost import ModuleCost, analyze_text
+
+HLO_SAMPLE = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %w = f32[8,8]{1,0} constant({...})
+      %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ni, %d)
+    }
+
+    %cond.2 (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main.3 (a: f32[8,8]) -> f32[8,8] {
+      %a = f32[8,8]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tup = (s32[], f32[8,8]) tuple(%z, %a)
+      %w2 = (s32[], f32[8,8]) while(%tup), condition=%cond.2, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%w2), index=1
+    }
+    """)
+
+
+def test_hlo_cost_counts_loop_trips():
+    r = analyze_text(HLO_SAMPLE)
+    # one 8x8x8 dot (1024 flops) × 5 trips
+    assert r["flops"] == 5 * 2 * 8 * 8 * 8, r
+
+
+def test_hlo_cost_collectives():
+    txt = HLO_SAMPLE.replace(
+        "%d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, "
+        "rhs_contracting_dims={0}",
+        "%d = f32[8,8]{1,0} all-reduce(%x), to_apply=%cond.2")
+    r = analyze_text(txt)
+    assert r["collective_bytes"] == 5 * 2 * 8 * 8 * 4  # 2x operand × trips
+    assert r["collective_by_kind"]["all-reduce"] > 0
+
+
+def test_minimesh_lower_compile_trainstep():
+    """The full dry-run stack (rules, specs, train step) on a 2×4 mesh."""
+    script = """
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import jax, jax.numpy as jnp
+        from repro import configs
+        from repro.configs.shapes import ShapeSpec, input_specs
+        from repro.core.policy import PrecisionPolicy
+        from repro.dist.context import DistCtx
+        from repro.dist.sharding import ShardingRules
+        from repro.models import transformer as T
+        from repro.optim.opt import OptConfig, sgd_init
+        from repro.train import init_train_state, make_train_step
+        from jax.sharding import AxisType
+
+        cfg = configs.get_smoke('granite_moe_1b')
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(AxisType.Auto,)*2)
+        dist = DistCtx(token_axes=('data',), ep_axis='model',
+                       fsdp_axis='data', cp_axis='data',
+                       all_axes=('data', 'model'))
+        pol = PrecisionPolicy('dfxp', comp_width=10, update_width=12)
+        gs = T.group_shapes(cfg)
+        opt = OptConfig(kind='sgd', lr=0.01, lr_decay_steps=100)
+
+        def loss_fn(p, b, s, exps):
+            return T.loss_fn(cfg, pol, p, b, exps, s, dist=dist,
+                             remat='full', ce_chunk=16)
+
+        step = make_train_step(loss_fn, gs, pol, opt, microbatches=2)
+        def make_state():
+            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            return init_train_state(params, sgd_init(params), gs, pol,
+                                    init_exp=-8.0)
+        state_shape = jax.eval_shape(make_state)
+        rules = ShardingRules(mesh)
+        state_sh = rules.state_shardings(state_shape)
+        batch = {'tokens': jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 'labels': jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        batch_sh = rules.batch_shardings(batch)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh, None),
+                              out_shardings=(state_sh, None)).lower(
+                state_shape, batch, rng)
+            compiled = lowered.compile()
+        txt = compiled.as_text()
+        assert 'all-to-all' in txt or 'all-reduce' in txt
+        from benchmarks.hlo_cost import analyze_text
+        r = analyze_text(txt)
+        assert r['flops'] > 0 and r['traffic_bytes'] > 0
+        print('MINIMESH OK', int(r['flops']))
+    """
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    assert "MINIMESH OK" in res.stdout
