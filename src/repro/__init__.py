@@ -1,0 +1,8 @@
+"""Low-precision-multiplication training reproduction (jax).
+
+Deliberately import-light: ``repro.launch.dryrun`` must be able to set
+``XLA_FLAGS`` before jax initializes a backend, so nothing here may import
+jax (subpackages that need it import it themselves).
+"""
+
+__version__ = "0.1.0"

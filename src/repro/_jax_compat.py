@@ -1,0 +1,109 @@
+"""Backfill newer jax mesh/shard_map APIs onto older jax (0.4.x).
+
+The repo (and its tests) are written against the current jax surface:
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``, ``jax.shard_map``,
+``jax.sharding.AxisType`` and ``jax.sharding.get_abstract_mesh``. On jax
+0.4.x those live elsewhere (``jax.experimental.shard_map``, the ``Mesh``
+context manager) or don't exist. :func:`install` patches the gaps in the
+``jax`` namespace — strictly additive and idempotent: on a jax that already
+has an attribute, that attribute is left untouched.
+
+Installed automatically by ``src/sitecustomize.py`` (any process started
+with ``PYTHONPATH=src``) and by ``repro.dist`` on import, so both the pytest
+main process and the ``python -c`` subprocess tests get it before they touch
+the mesh APIs. Importing jax here does NOT initialize a backend: XLA reads
+``XLA_FLAGS`` lazily at first device use, so callers that force a host
+device count after this module loads still get it (verified by the
+multi-device subprocess tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+
+
+def _physical_mesh():
+    """The ambient mesh set by ``with mesh:`` / the ``set_mesh`` shim."""
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def ambient_mesh():
+    """Current ambient mesh, or ``None`` when no mesh is active.
+
+    Works on both old jax (physical resource env) and new jax
+    (``get_abstract_mesh``); repo code uses this instead of calling either
+    API directly.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        return None if mesh is None or getattr(mesh, "empty", False) else mesh
+    mesh = _physical_mesh()
+    return None if mesh.empty else mesh
+
+
+def install() -> None:
+    if getattr(jax, "_repro_compat_installed", False):
+        return
+    jax._repro_compat_installed = True
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    _orig_make_mesh = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kwargs):
+        # axis_types (Auto/Explicit/Manual) only exists on newer jax; the
+        # repo always passes Auto, which is 0.4.x's only behavior — drop it.
+        del axis_types
+        return _orig_make_mesh(axis_shapes, axis_names, *args, **kwargs)
+
+    import inspect
+
+    if "axis_types" not in inspect.signature(_orig_make_mesh).parameters:
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _physical_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _orig_shard_map
+
+        def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=None,
+                      check_rep=None, auto=frozenset()):
+            if mesh is None:
+                mesh = _physical_mesh()
+                if mesh.empty:
+                    raise ValueError(
+                        "jax.shard_map without an explicit mesh requires an "
+                        "ambient mesh (enter one with jax.set_mesh(mesh))")
+            rep = True
+            if check_vma is not None:
+                rep = check_vma
+            elif check_rep is not None:
+                rep = check_rep
+            return _orig_shard_map(f, mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=rep,
+                                   auto=auto)
+
+        jax.shard_map = shard_map
+
+
+install()

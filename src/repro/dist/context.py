@@ -1,0 +1,67 @@
+"""DistCtx — the mesh-axis contract threaded through models and launchers.
+
+A ``DistCtx`` names which mesh axes play which logical role; model code
+never mentions concrete axis names. An inactive context (``all_axes=()``,
+the default) means single-host execution: every ``dist``-aware code path
+must collapse to plain local math, which is what the equivalence tests
+(EP MoE == local MoE, CP attention == monolithic attention) pin down.
+
+Roles:
+  * ``token_axes``  — axes the flattened token batch is sharded over
+    (data parallel; ``("pod", "data")`` across pods);
+  * ``ep_axis``     — expert-parallel axis: MoE expert banks are sharded
+    over it and dispatch/combine are ``all_to_all``s along it;
+  * ``fsdp_axis``   — parameter-sharding axis: expert weights live sliced
+    over it and are all-gathered per layer (training) or kept stationary
+    with activations moving instead (``moe_stationary`` decode);
+  * ``cp_axis``     — context parallelism: with ``cp_decode`` set (the
+    long-context serving cells, where ``ShardingRules(seq_shard_cache=
+    True)`` shards the KV window over ``cp_axis``), decode attention runs
+    :func:`repro.dist.cp_attention.cp_decode_attention` over the shards;
+  * ``attn_seq_shard`` — shard training attention over the sequence instead
+    of heads (for archs whose head counts don't divide the TP degree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    token_axes: Tuple[str, ...] = ()
+    ep_axis: Optional[str] = None
+    fsdp_axis: Optional[str] = None
+    cp_axis: Optional[str] = None
+    all_axes: Tuple[str, ...] = ()
+    moe_stationary: bool = False
+    attn_seq_shard: bool = False
+    cp_decode: bool = False        # decode KV window is sharded over cp_axis
+
+    @property
+    def active(self) -> bool:
+        """Whether a mesh is in play at all (single-host ⇔ False)."""
+        return bool(self.all_axes)
+
+    @property
+    def cp_axes(self) -> Tuple[str, ...]:
+        return (self.cp_axis,) if self.cp_axis else ()
+
+
+def single_pod_ctx() -> DistCtx:
+    """16×16 single-pod mesh: ``data`` × ``model`` (see launch/mesh.py)."""
+    return DistCtx(token_axes=("data",), ep_axis="model", fsdp_axis="data",
+                   cp_axis="data", all_axes=("data", "model"))
+
+
+def multi_pod_ctx() -> DistCtx:
+    """2×16×16 two-pod mesh: pure-DP ``pod`` axis in front of the pod mesh.
+
+    FSDP stays *within* a pod (``data``) so weight all-gathers never cross
+    the slow inter-pod links; only gradient all-reduce does — which is
+    exactly the wire :func:`repro.dist.compress.compress_decompress`
+    narrows to low-bit lanes.
+    """
+    return DistCtx(token_axes=("pod", "data"), ep_axis="model",
+                   fsdp_axis="data", cp_axis="data",
+                   all_axes=("pod", "data", "model"))

@@ -1,0 +1,183 @@
+"""ShardingRules — logical param/activation names → ``PartitionSpec``s.
+
+One place resolves every jit boundary sharding (train state, inference
+params, batches, decode caches) from leaf *names* and shapes, so the model
+code never hard-codes axis names and the dry-run can swap meshes freely.
+
+Axis roles (matching :mod:`repro.dist.context`):
+  * ``dp``   — batch/token axis: ``data``, or ``("pod", "data")`` across
+    pods (the pure-DP pod axis composes with in-pod data parallelism);
+  * ``tp``   — ``model``: tensor-parallel feature/vocab/head shards and the
+    expert-parallel axis for MoE banks;
+  * ``fsdp`` — ``data``: parameter sharding, always within a pod.
+
+Resolution is name-aware (embed/head/MoE/down-vs-up projections) with a
+divisibility guard: an axis whose size doesn't evenly divide the dimension
+is dropped (replicated) rather than producing an invalid sharding — small
+smoke configs and production configs resolve through the same table.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# 2D weights whose *first* dim is the contraction (fan-in) feature axis that
+# upstream tensor parallelism already sharded → shard dim0 over tp.
+_DOWN_PROJ = {"w_down", "w_out", "wo", "out_proj"}
+
+
+def _path_parts(path) -> Tuple[str, ...]:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return tuple(parts)
+
+
+class ShardingRules:
+    def __init__(self, mesh, *, multi_pod: bool = False,
+                 shard_batch: bool = True, seq_shard_cache: bool = False):
+        self.mesh = mesh
+        self.multi_pod = multi_pod
+        self.shard_batch = shard_batch
+        self.seq_shard_cache = seq_shard_cache
+        self.dp = ("pod", "data") if multi_pod else "data"
+        self.tp = "model"
+        self.fsdp = "data"
+        # context-parallel KV-window axis: in-pod only, matching
+        # DistCtx.cp_axis — the 500k cache must never be gathered across
+        # the slow inter-pod links (pods hold replicas instead).
+        self.cp = "data"
+
+    # -- helpers ----------------------------------------------------------
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        return math.prod(self.mesh.shape[n] for n in names)
+
+    def _guard(self, entries, shape) -> P:
+        """Drop axes that don't divide their dim; build the PartitionSpec."""
+        out = []
+        for i, e in enumerate(entries[:len(shape)]):
+            ok = e is not None and self._axis_size(e) > 0 and \
+                shape[i] % self._axis_size(e) == 0
+            out.append(e if ok else None)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def _named(self, entries, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self._guard(tuple(entries), shape))
+
+    # -- parameters / train state -----------------------------------------
+    def _param_entries(self, parts: Tuple[str, ...], shape) -> tuple:
+        leaf = parts[-1]
+        stacked = "stacked" in parts          # leading scan-layer axis
+        base = shape[1:] if stacked and len(shape) > 1 else shape
+        nd = len(base)
+        in_moe = any(p.endswith(":moe") for p in parts) and \
+            "shared" not in parts
+
+        if nd < 2:                              # norms, biases, scalars
+            ent: tuple = (None,) * nd
+        elif "embed" in parts:                  # [V, D] — vocab TP
+            ent = (self.tp, None)
+        elif "head" in parts:                   # [D, V]
+            ent = (None, self.tp)
+        elif in_moe and leaf in ("w_gate", "w_up") and nd == 3:
+            ent = (self.tp, self.fsdp, None)    # [E, D, F]: EP × FSDP
+        elif in_moe and leaf == "w_down" and nd == 3:
+            ent = (self.tp, None, self.fsdp)    # [E, F, D]
+        elif in_moe and leaf == "router":
+            ent = (None,) * nd                  # routing is replicated
+        elif nd == 2 and leaf in _DOWN_PROJ:
+            ent = (self.tp, self.fsdp)
+        elif nd == 2:
+            ent = (self.fsdp, self.tp)          # up-projections / qkv
+        elif nd == 3 and leaf == "w":
+            ent = (None, self.fsdp, self.tp)    # maxout [k, D, F]
+        else:
+            ent = (None,) * nd
+        if stacked and len(shape) > nd:
+            ent = (None,) + ent
+        return ent
+
+    def params_shardings(self, params):
+        """NamedSharding tree for a bare parameter pytree."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, leaf: self._named(
+                self._param_entries(_path_parts(p), leaf.shape), leaf.shape),
+            params)
+
+    def state_shardings(self, state):
+        """NamedSharding tree for a full ``TrainState`` (eval_shape) pytree.
+
+        Optimizer state mirrors the parameter tree (same trailing names →
+        same specs); scale state and the step counter are replicated.
+        """
+        def spec(path, leaf):
+            parts = _path_parts(path)
+            if parts and parts[0] in ("scale", "step"):
+                return NamedSharding(self.mesh, P())
+            return self._named(self._param_entries(parts, leaf.shape),
+                               leaf.shape)
+        return jax.tree_util.tree_map_with_path(spec, state)
+
+    # -- batches -----------------------------------------------------------
+    def batch_shardings(self, batch):
+        """Token batches: batch dim over ``dp`` (M-RoPE positions carry the
+        batch on axis 1)."""
+        def spec(path, leaf):
+            nd = len(leaf.shape)
+            parts = _path_parts(path)
+            if not self.shard_batch or nd == 0:
+                ent: tuple = (None,) * nd
+            elif parts and parts[-1] == "positions" and nd == 3:
+                ent = (None, self.dp) + (None,) * (nd - 2)
+            else:
+                ent = (self.dp,) + (None,) * (nd - 1)
+            return self._named(ent, leaf.shape)
+        return jax.tree_util.tree_map_with_path(spec, batch)
+
+    # -- decode caches ------------------------------------------------------
+    def cache_shardings(self, cache):
+        """Decode caches: stacked-layer leaves [L, B, ...] shard the batch;
+        with ``seq_shard_cache`` the KV ring-buffer *window* axis shards
+        over ``cp`` instead (context parallelism for 500k windows — decode
+        then runs :func:`repro.dist.cp_attention.cp_decode_attention`
+        over the same axis)."""
+        bdim = self.dp if self.shard_batch else None
+
+        def spec(path, leaf):
+            parts = _path_parts(path)
+            leafname = parts[-1] if parts else ""
+            nd = len(leaf.shape)
+            if leafname == "enc_memory":
+                ent: tuple = (bdim,) + (None,) * (nd - 1)
+            elif (self.seq_shard_cache and nd >= 3
+                  and leafname in ("k", "v", "pos")):
+                ent = (None, None, self.cp) + (None,) * (nd - 3)
+            elif nd >= 2:
+                ent = (None, bdim) + (None,) * (nd - 2)
+            else:
+                ent = (None,) * nd
+            return self._named(ent, leaf.shape)
+        return jax.tree_util.tree_map_with_path(spec, cache)
+
+    # -- introspection ------------------------------------------------------
+    def describe(self, tree) -> Dict[str, str]:
+        """Human-readable ``{path: spec}`` map (for dry-run reports/tests)."""
+        out: Dict[str, str] = {}
+        flat = jax.tree_util.tree_flatten_with_path(
+            self.params_shardings(tree))[0]
+        for path, sh in flat:
+            out["/".join(_path_parts(path))] = str(sh.spec)
+        return out

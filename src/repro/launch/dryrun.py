@@ -63,7 +63,9 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "c64": 8, "c128": 16}
+                "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1,
+                "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "f8e3m4": 1}
 
 
 OVERRIDES: dict = {}
@@ -78,21 +80,33 @@ def policy_for(arch: str) -> PrecisionPolicy:
                            a2a_compress_bits=OVERRIDES.get("a2a_bits", 0))
 
 
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
 def collective_bytes(hlo_text: str) -> dict:
-    """Sum input-operand bytes per collective kind from partitioned HLO."""
+    """Sum output bytes per collective kind from partitioned HLO.
+
+    Handles both forms:
+      %all-gather.3 = bf16[8,5120,8192]{1,0} all-gather(%p) ...
+      %all-to-all.12 = (s8[2,8,1024]{2,1,0}, s8[...], ...) all-to-all(...)
+    (multi-operand collectives — e.g. the int8 lanes of
+    ``compressed_all_to_all`` — lower to the tuple form; every element
+    counts toward the wire bytes).
+    """
     out = {k: 0.0 for k in COLLECTIVES}
     count = {k: 0 for k in COLLECTIVES}
-    # e.g.:  %all-gather.3 = bf16[8,5120,8192]{2,1,0} all-gather(%param.3) ...
-    pat = re.compile(
-        r"= (?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]* ("
-        + "|".join(COLLECTIVES) + r")[ (]")
+    pat = re.compile(r"= (\([^)]*\)|\S+) ("
+                     + "|".join(COLLECTIVES) + r")\(")
     for m in pat.finditer(hlo_text):
-        dt, dims, kind = m.group(1), m.group(2), m.group(3)
-        size = 1
-        for d in dims.split(","):
-            if d:
-                size *= int(d)
-        out[kind] += size * _DTYPE_BYTES.get(dt, 4)
+        shapes, kind = m.group(1), m.group(2)
+        size = 0.0
+        for dt, dims in _SHAPE.findall(shapes):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _DTYPE_BYTES.get(dt, 4)
+        out[kind] += size
         count[kind] += 1
     return {"bytes": out, "count": count,
             "total_bytes": sum(out.values())}
@@ -123,6 +137,10 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
     specs = input_specs(cfg, shape)
 
     long_ctx = shape_name == "long_500k"
+    if long_ctx:
+        # KV window is sharded (seq_shard_cache below): decode attention
+        # must run the context-parallel exact-merge path over it.
+        dist = dataclasses.replace(dist, cp_decode=True)
     rules = ShardingRules(mesh, multi_pod=multi_pod,
                           shard_batch=not long_ctx,
                           seq_shard_cache=long_ctx)
@@ -226,6 +244,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x returns [dict], newer: dict
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     if hlo_dir:
         _os.makedirs(hlo_dir, exist_ok=True)

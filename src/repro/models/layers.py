@@ -255,12 +255,18 @@ def attention_prefill(params, spec: AttnSpec, x: Array, positions: Array,
 
 def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
                      cache_k: Array, cache_v: Array, cache_pos: Array,
-                     tape: QTape, prefix: str, window=None):
+                     tape: QTape, prefix: str, window=None, dist=None):
     """One-token decode. ``x``: [B, 1, D]; cache: [B, W, K, hd] (ring buffer).
 
     Writes the new token's K/V into slot ``pos % W`` (so the token attends to
     itself), then attends over the whole buffer with a position-validity
     mask. Returns ``(y, cache_k', cache_v', cache_pos')``.
+
+    When ``dist.cp_decode`` is set (long-context serving: the cache window
+    axis is sharded over ``dist.cp_axis``), the global (non-windowed)
+    attention runs context-parallel via
+    :func:`repro.dist.cp_attention.cp_decode_attention` — each shard
+    attends over its local slots and softmax statistics merge exactly.
     """
     B = x.shape[0]
     positions = jnp.broadcast_to(pos, (B, 1)) if jnp.ndim(pos) == 0 else pos
@@ -275,17 +281,24 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     G = H // K
     scale = 1.0 / math.sqrt(hd)
 
-    qg = q.reshape(B, 1, K, G, hd)
-    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k,
-                   preferred_element_type=jnp.float32) * scale
-    q_pos = positions if positions.ndim == 2 else positions[0]
-    valid = _mask(q_pos, cache_pos, window, spec.causal)  # [B, 1, W]
-    valid = valid & (cache_pos >= 0)[:, None, :]          # -1 = empty slot
-    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
-    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    o = jnp.einsum("bkgqs,bskh->bqkgh", p, cache_v.astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
-    o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
+    if (dist is not None and dist.active and dist.cp_decode and dist.cp_axis
+            and window is None):
+        from repro.dist.cp_attention import cp_decode_attention
+        o = cp_decode_attention(q, cache_k, cache_v, cache_pos, positions,
+                                num_heads=H, num_kv_heads=K, head_dim=hd,
+                                cp_axes=dist.cp_axes).astype(x.dtype)
+    else:
+        qg = q.reshape(B, 1, K, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = positions if positions.ndim == 2 else positions[0]
+        valid = _mask(q_pos, cache_pos, window, spec.causal)  # [B, 1, W]
+        valid = valid & (cache_pos >= 0)[:, None, :]          # -1 = empty slot
+        s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, cache_v.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
     y = tape.dot(f"{prefix}/wo", o, params["wo"])
     return tape.act(f"{prefix}/out", y), cache_k, cache_v, cache_pos
 

@@ -23,7 +23,7 @@ structure (``group_shapes``), which is what sizes the DFXP ScaleState.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -354,7 +354,7 @@ def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
             else:
                 y, ck, cv, cp = L.attention_decode(
                     bp, spec, h, positions, cache_in["k"], cache_in["v"],
-                    cache_in["pos"], tape, pfx, window=window)
+                    cache_in["pos"], tape, pfx, window=window, dist=dist)
                 cache_out = {"k": ck, "v": cv, "pos": cp}
     elif blk.kind == "ffn":
         if cfg.ffn_kind == "swiglu":

@@ -21,7 +21,7 @@ from repro.core.policy import PrecisionPolicy
 from repro.core.scale import calibrate_exp
 from repro.optim.opt import OptConfig, sgd_update
 
-from .state import _bexp, param_group_shapes, unpack_tree
+from .state import param_group_shapes
 from .step import _map_with_group
 
 Array = jax.Array

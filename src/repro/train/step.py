@@ -21,7 +21,6 @@ re-packs, so wide master copies never persist in HBM.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict, Optional
 
 import jax
@@ -93,7 +92,6 @@ def make_train_step(
     grad_transform: Optional[Callable] = None,   # e.g. DFXP compression
 ):
     """Build ``step(state, batch, rng) -> (state, metrics)``."""
-    comp_fmt = policy.comp_format()
     dyn = policy.dynamic
     quant_params = policy.enabled and policy.arithmetic in ("fixed", "dfxp")
 

@@ -1,0 +1,12 @@
+"""Auto-loaded by any interpreter started with ``PYTHONPATH=src``.
+
+Installs the jax API backfills (``repro._jax_compat``) before user code
+runs, so scripts that use ``jax.set_mesh`` / ``jax.shard_map`` /
+``jax.sharding.AxisType`` *before* importing ``repro`` — notably the
+subprocess bodies in tests/test_dist.py — work on jax 0.4.x. Must never
+break interpreter startup, hence the blanket except.
+"""
+try:
+    import repro._jax_compat  # noqa: F401  (patches jax on import)
+except Exception:
+    pass

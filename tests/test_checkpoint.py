@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, restore_tree, save_tree
-from repro.core.packed import PackedArray, pack, unpack
+from repro.core.packed import pack, unpack
 
 
 def _tree(key):

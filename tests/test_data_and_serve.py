@@ -24,7 +24,6 @@ def test_lm_labels_shifted():
 
 
 def test_lm_host_sharding_disjoint():
-    full = SyntheticLM(1000, 16, 8, seed=5, host_id=0, num_hosts=1)
     h0 = SyntheticLM(1000, 16, 8, seed=5, host_id=0, num_hosts=2)
     h1 = SyntheticLM(1000, 16, 8, seed=5, host_id=1, num_hosts=2)
     assert h0.host_batch == h1.host_batch == 4

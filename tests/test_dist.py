@@ -8,6 +8,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.dist.compress import compress_decompress, compress_tree
 
@@ -49,6 +50,7 @@ def _run_subprocess(body: str):
     return res.stdout
 
 
+@pytest.mark.multidevice
 def test_compressed_psum_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
@@ -72,6 +74,7 @@ def test_compressed_psum_multidevice():
     assert "OK" in out
 
 
+@pytest.mark.multidevice
 def test_cp_attention_exact_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np, math
@@ -107,6 +110,7 @@ def test_cp_attention_exact_multidevice():
     assert "OK" in out
 
 
+@pytest.mark.multidevice
 def test_moe_ep_multidevice_matches_local():
     """Expert-parallel shard_map MoE == the no-mesh local path."""
     out = _run_subprocess("""

@@ -4,7 +4,9 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.hlo_cost import ModuleCost, analyze_text
+import pytest
+
+from benchmarks.hlo_cost import analyze_text
 
 HLO_SAMPLE = textwrap.dedent("""\
     HloModule test
@@ -53,6 +55,8 @@ def test_hlo_cost_collectives():
     assert r["collective_by_kind"]["all-reduce"] > 0
 
 
+@pytest.mark.multidevice
+@pytest.mark.slow
 def test_minimesh_lower_compile_trainstep():
     """The full dry-run stack (rules, specs, train step) on a 2×4 mesh."""
     script = """
