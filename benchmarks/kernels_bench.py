@@ -1,9 +1,14 @@
-"""Kernel microbenchmarks: fused Pallas quantize / qmatmul vs jnp composite.
+"""Kernel microbenchmarks: fused Pallas quantize / matmul family vs jnp chains.
 
-On this CPU container the Pallas kernels run in interpret mode, so absolute
-times measure the *reference semantics*, not TPU perf; the jnp-composite
-rows are the ones that time real XLA-compiled code. Roofline projections
-for the TPU kernel live in EXPERIMENTS.md §Roofline.
+Rows come in jnp/fused pairs for each op the dispatch layer owns —
+quantize, qmatmul forward, dgrad (``ct @ qB^T``), wgrad (``qA^T @ ct``) —
+plus a full-train-step pair (composite vs ``PrecisionPolicy.fused_matmul``).
+
+On this CPU container the Pallas kernels run in interpret mode, so their
+absolute times measure the *reference semantics*, not TPU perf; the
+jnp-chain rows are the ones that time real XLA-compiled code.  The same
+rows recorded on a compiled TPU backend are the perf trajectory proper
+(`benchmarks/run.py` persists them to ``BENCH_kernels.json``).
 """
 from __future__ import annotations
 
@@ -13,9 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import fixed_round
+from repro.kernels._tiling import default_interpret
 from repro.kernels.dfxp.ops import dfxp_quantize
-from repro.kernels.qmatmul.ops import qmatmul
-from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.qmatmul.ops import qmatmul, qmm
+
+WIDTH = 10
 
 
 def _time(fn, *args, reps=5):
@@ -27,24 +34,122 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
+def _q(x, e):
+    y, _ = fixed_round(x, WIDTH, e)
+    return y
+
+
+def make_tiny_maxout_step(policy):
+    """(jitted step, initial state) for a tiny maxout DFXP train loop.
+
+    Shared harness: the train-step bench rows below and the fused-on/off
+    loss-bit-identity test (tests/test_fused_dot.py) must exercise the
+    *same* step construction."""
+    from repro.models import maxout as MX
+    from repro.optim.opt import OptConfig, sgd_init
+    from repro.train import init_train_state, make_train_step
+
+    cfg = MX.MaxoutConfig(input_dim=20, hidden=(16,), pieces=2,
+                          dropout_input=0.0, dropout_hidden=0.0)
+    gs = MX.group_shapes(cfg)
+    params = MX.init_params(cfg, jax.random.PRNGKey(7))
+    state = init_train_state(params, sgd_init(params), gs, policy,
+                             init_exp=-6.0)
+
+    def loss_fn(p, b, s, exps):
+        return MX.loss_fn(cfg, policy, p, b, exps, s)
+
+    step = jax.jit(make_train_step(
+        loss_fn, gs, policy, OptConfig(kind="sgd", lr=0.1)))
+    return step, state
+
+
+def tiny_maxout_batch(i: int = 0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(8))
+    return {"x": jax.random.normal(kx, (16, 20)) + i,
+            "y": jax.random.randint(ky, (16,), 0, 10)}
+
+
+def _train_step_row(fused: bool, steps: int):
+    """Seconds-per-step of the tiny maxout DFXP train loop."""
+    import dataclasses
+
+    from repro.core.policy import DFXP_10_12
+
+    policy = dataclasses.replace(DFXP_10_12, fused_matmul=fused)
+    step, state = make_tiny_maxout_step(policy)
+    batch = tiny_maxout_batch()
+    state, m = step(state, batch, jax.random.PRNGKey(2))   # warmup/compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(steps):
+        state, m = step(state, batch, jax.random.PRNGKey(3 + i))
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / steps * 1e6
+
+
+def run(tiny: bool = False):
+    """``tiny=True``: CI-smoke shapes — asserts the paths execute, not perf."""
     out = []
-    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    mode = "interp" if default_interpret() else "tpu"
+    reps = 2 if tiny else 5
     e = jnp.float32(-6)
 
-    jnp_q = jax.jit(lambda x, e: fixed_round(x, 10, e))
-    out.append(("kernels/quantize_jnp_1024x1024", _time(jnp_q, x, e), 1.0))
-    out.append(("kernels/quantize_pallas_interp_1024x1024",
-                _time(lambda x, e: dfxp_quantize(x, e, width=10,
-                                                 interpret=True), x, e), 1.0))
+    # -- quantize -----------------------------------------------------------
+    QM, QN = (128, 256) if tiny else (1024, 1024)
+    x = jax.random.normal(jax.random.PRNGKey(0), (QM, QN))
+    jnp_q = jax.jit(lambda x, e: fixed_round(x, WIDTH, e))
+    tag = f"{QM}x{QN}"
+    out.append((f"kernels/quantize_jnp_{tag}", _time(jnp_q, x, e, reps=reps),
+                1.0))
+    out.append((f"kernels/quantize_fused_{mode}_{tag}",
+                _time(lambda x, e: dfxp_quantize(x, e, width=WIDTH),
+                      x, e, reps=reps), 1.0))
 
-    a = jax.random.normal(jax.random.PRNGKey(1), (256, 512))
-    b = jax.random.normal(jax.random.PRNGKey(2), (512, 256))
-    ref = jax.jit(lambda a, b: qmatmul_ref(a, b, e, e, width=10))
-    out.append(("kernels/qmatmul_jnp_256x512x256", _time(ref, a, b),
-                2 * 256 * 512 * 256 / 1e6))
-    out.append(("kernels/qmatmul_pallas_interp_256x512x256",
-                _time(lambda a, b: qmatmul(a, b, e, e, width=10,
-                                           interpret=True), a, b),
-                2 * 256 * 512 * 256 / 1e6))
+    # -- matmul family: fwd / dgrad / wgrad ---------------------------------
+    M, K, N = (32, 64, 32) if tiny else (256, 512, 256)
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(1), 3)
+    a = jax.random.normal(ka, (M, K))
+    b = jax.random.normal(kb, (K, N)) * 0.5
+    ct = jax.random.normal(kc, (M, N))
+    mflop = 2 * M * K * N / 1e6
+    tag = f"{M}x{K}x{N}"
+
+    # forward: C = q(a) @ q(b)
+    fwd_jnp = jax.jit(lambda a, b: jnp.dot(
+        _q(a, e), _q(b, e), preferred_element_type=jnp.float32))
+    out.append((f"kernels/qmatmul_fwd_jnp_{tag}",
+                _time(fwd_jnp, a, b, reps=reps), mflop))
+    out.append((f"kernels/qmatmul_fwd_fused_{mode}_{tag}",
+                _time(lambda a, b: qmatmul(a, b, e, e, width=WIDTH),
+                      a, b, reps=reps), mflop))
+
+    # dgrad: dA = q(ct) @ q(b)^T  (layout nt)
+    dgrad_jnp = jax.jit(lambda ct, b: jax.lax.dot_general(
+        _q(ct, e), _q(b, e), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32))
+    out.append((f"kernels/qmatmul_dgrad_jnp_{tag}",
+                _time(dgrad_jnp, ct, b, reps=reps), mflop))
+    out.append((f"kernels/qmatmul_dgrad_fused_{mode}_{tag}",
+                _time(lambda ct, b: qmm(ct, b, e, e, kind="nt",
+                                        width_a=WIDTH, width_b=WIDTH),
+                      ct, b, reps=reps), mflop))
+
+    # wgrad: dB = q(a)^T @ q(ct)  (layout tn)
+    wgrad_jnp = jax.jit(lambda a, ct: jax.lax.dot_general(
+        _q(a, e), _q(ct, e), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32))
+    out.append((f"kernels/qmatmul_wgrad_jnp_{tag}",
+                _time(wgrad_jnp, a, ct, reps=reps), mflop))
+    out.append((f"kernels/qmatmul_wgrad_fused_{mode}_{tag}",
+                _time(lambda a, ct: qmm(a, ct, e, e, kind="tn",
+                                        width_a=WIDTH, width_b=WIDTH),
+                      a, ct, reps=reps), mflop))
+
+    # -- full train step (fwd + dgrad + wgrad per dot site) -----------------
+    steps = 1 if tiny else 3
+    out.append(("kernels/train_step_jnp_maxout16",
+                _train_step_row(False, steps), 1.0))
+    out.append((f"kernels/train_step_fused_{mode}_maxout16",
+                _train_step_row(True, steps), 1.0))
     return out

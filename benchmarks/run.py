@@ -5,7 +5,13 @@
 # loss normalized by the fp32 baseline (the paper's normalized test error).
 # Kernel rows report microseconds per call; ``derived`` is MFLOP for
 # matmuls. Run with: PYTHONPATH=src python -m benchmarks.run [--quick]
+#
+# The kernels suite additionally persists its rows to ``BENCH_kernels.json``
+# (jnp-composite vs fused Pallas pairs for quantize, qmatmul fwd, dgrad,
+# wgrad, and the full train step) — the perf-trajectory record; ``--tiny``
+# shrinks it to CI-smoke shapes that assert execution, not perf.
 import argparse
+import json
 import sys
 
 
@@ -14,6 +20,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="table3 + kernels only")
     ap.add_argument("--only", default="")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke shapes for the kernels suite")
+    ap.add_argument("--json-out", default="BENCH_kernels.json",
+                    help="where the kernels suite writes its JSON rows")
     args = ap.parse_args()
 
     from . import kernels_bench, paper_tables
@@ -24,7 +34,7 @@ def main() -> None:
         ("fig2", paper_tables.fig2_comp_width),
         ("fig3", paper_tables.fig3_update_width),
         ("fig4", paper_tables.fig4_overflow_rate),
-        ("kernels", kernels_bench.run),
+        ("kernels", lambda: kernels_bench.run(tiny=args.tiny)),
     ]
     if args.quick:
         suites = [s for s in suites if s[0] in ("table3", "kernels")]
@@ -34,11 +44,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in suites:
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]:.4f}", flush=True)
         except Exception as e:  # keep the suite running
             print(f"{name}/ERROR,0,0  # {e}", file=sys.stderr)
             raise
+        if name == "kernels" and args.json_out:
+            import jax
+            payload = {
+                "meta": {"backend": jax.default_backend(),
+                         "tiny": args.tiny},
+                "rows": [{"name": n, "us_per_call": round(us, 1),
+                          "derived": d} for n, us, d in rows],
+            }
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"# wrote {len(rows)} kernel rows -> {args.json_out}",
+                  file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -54,6 +54,11 @@ class PrecisionPolicy:
     compute_dtype: str = "float32"   # container dtype for activations/compute
     grad_compress_bits: int = 0      # 0=off; 8|16: DFXP DP all-reduce compression
     a2a_compress_bits: int = 0       # 0=off; 8|16: MoE all_to_all in int lanes
+    fused_matmul: bool = False       # route DFXP QTape.dot through the fused
+    #   Pallas qmatmul (fwd + dgrad + wgrad custom-VJP kernels; see
+    #   repro.kernels.dispatch). Bit-identical to the jnp composite;
+    #   off by default because interpret-mode Pallas (any non-TPU
+    #   backend) trades speed for kernel-faithful execution.
 
     def __post_init__(self):
         if self.arithmetic not in (*_FLOATS, "fixed", "dfxp", "observe"):

@@ -61,10 +61,12 @@ def exact_pow2(e: Array) -> Array:
 # When enabled, large quantization sites route through the fused Pallas
 # kernel (kernels/dfxp) instead of the jnp composite — identical numerics
 # (kernel tests assert bit-equality), one HBM pass instead of several.
-_PALLAS = {"enabled": False, "interpret": True, "min_size": 1 << 14}
+# ``interpret=None`` defers to the dispatch layer's backend detection
+# (compiled on TPU, interpret elsewhere).
+_PALLAS = {"enabled": False, "interpret": None, "min_size": 1 << 14}
 
 
-def enable_pallas_quantize(enable: bool = True, *, interpret: bool = True,
+def enable_pallas_quantize(enable: bool = True, *, interpret=None,
                            min_size: int = 1 << 14) -> None:
     _PALLAS.update(enabled=enable, interpret=interpret, min_size=min_size)
 

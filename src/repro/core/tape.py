@@ -106,13 +106,33 @@ class QTape:
             self._record(f"a:{name}",
                          q_stats(x, pol.update_format(), self._exp(f"a:{name}")))
 
-    def dot(self, name: str, x: Array, w: Array) -> Array:
-        """Quantized matmul: both operands at comp width, wide accumulate.
+    def dot(self, name: str, x: Array, w: Array, *,
+            transpose_b: bool = False) -> Array:
+        """Quantized matmul: weight re-quantized to comp width, wide accumulate.
 
         Operands are cast to ``x.dtype`` (the policy's compute container);
-        accumulation is f32 — the MXU contract / paper §7."""
+        accumulation is f32 — the MXU contract / paper §7.  ``transpose_b``
+        contracts against ``w``'s last dim (the tied-lm-head layout).
+
+        With ``policy.fused_matmul`` set under DFXP arithmetic, the whole
+        site — weight rounding, matmul, dgrad, wgrad — runs as one fused
+        Pallas kernel per pass (:mod:`repro.kernels.dispatch`), bit-identical
+        to the composite below; stats recording is unchanged.
+        """
+        pol = self.policy
+        if pol.dynamic and pol.fused_matmul:
+            from repro.kernels.dispatch import tape_dot
+            fmt = pol.comp_format()
+            e = self._exp(f"w:{name}")
+            y = tape_dot(x, w, e, width=fmt.width, transpose_b=transpose_b)
+            self._record(f"w:{name}", q_stats(w, fmt, e))
+            return y
         wq = self.weight(name, w).astype(x.dtype)
-        y = jnp.matmul(x, wq, preferred_element_type=jnp.float32)
+        if transpose_b:
+            y = jnp.einsum("...d,vd->...v", x, wq,
+                           preferred_element_type=jnp.float32)
+        else:
+            y = jnp.matmul(x, wq, preferred_element_type=jnp.float32)
         return y.astype(x.dtype)
 
 

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# `dispatch` is the production entry point: differentiable fused DFXP
+# matmul (custom-VJP fwd/dgrad/wgrad) with autotuned block selection
+# and backend detection. The per-kernel packages stay importable on
+# their own for tests/benchmarks.
+from .dispatch import fused_dot, tape_dot  # noqa: F401

@@ -5,8 +5,8 @@ reshapes to 2D, pads to tile multiples (pad values quantize to 0 and are
 excluded from overflow counts by construction — 0 never overflows), runs
 the Pallas kernel, and unpads.
 
-On CPU (no TPU available) ``interpret=True`` executes the kernel body in
-Python — numerically identical, used by tests/benchmarks.
+``interpret=None`` auto-detects the backend (compiled on TPU, interpret
+elsewhere — numerically identical, used by tests/benchmarks).
 """
 from __future__ import annotations
 
@@ -16,23 +16,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import exact_pow2
+from repro.kernels._tiling import quantize_blocks, resolve_interpret, round_up
 
 from .dfxp_kernel import dfxp_quantize_2d
 
 
-def _pick_blocks(M: int, N: int):
-    bn = 128
-    while bn * 2 <= min(N, 512):
-        bn *= 2
-    bm = 8
-    while bm * 2 <= min(M, 256):
-        bm *= 2
-    return bm, bn
-
-
 @functools.partial(jax.jit, static_argnames=("width", "interpret"))
-def dfxp_quantize(x, e, *, width: int, interpret: bool = True):
+def dfxp_quantize(x, e, *, width: int, interpret=None):
     """Fused quantize+stats. Returns (y, stats[2])."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     n = x.size
     if x.ndim >= 2 and orig_shape[-1] % 128 == 0:
@@ -40,27 +32,20 @@ def dfxp_quantize(x, e, *, width: int, interpret: bool = True):
         N = orig_shape[-1]
         M = n // N
         x2 = x.reshape(M, N)
-        bm, bn = _pick_blocks(M, N)
-        pm, pn = (-M) % bm, (-N) % bn
-        if pm or pn:
-            x2 = jnp.pad(x2, ((0, pm), (0, pn)))
+        bm, bn = quantize_blocks(M, N)
+        x2 = jnp.pad(x2, ((0, round_up(M, bm) - M), (0, round_up(N, bn) - N)))
     else:
         # flatten + pad (pads quantize to 0 and never overflow)
         N = 128 if n < 512 * 8 else 512
         M = -(-n // N)
-        bm, bn = _pick_blocks(M, N)
-        M = (M + bm - 1) // bm * bm
-        flat = jnp.pad(x.reshape(-1), (0, M * N - n))
-        x2 = flat.reshape(M, N)
-        pm = pn = 0
+        bm, bn = quantize_blocks(M, N)
+        M = round_up(M, bm)
+        x2 = jnp.pad(x.reshape(-1), (0, M * N - n)).reshape(M, N)
 
     step = exact_pow2(e)
     inv_step = exact_pow2(-jnp.asarray(e, jnp.float32))
     y, stats = dfxp_quantize_2d(x2, step, inv_step, width=width,
                                 block_m=bm, block_n=bn, interpret=interpret)
     if x.ndim >= 2 and orig_shape[-1] % 128 == 0:
-        if pm or pn:
-            y = y[:y.shape[0] - pm if pm else None, :N]
-            y = y[: (n // N), :N]
-        return y.reshape(orig_shape), stats
+        return y[: n // N, :N].reshape(orig_shape), stats
     return y.reshape(-1)[:n].reshape(orig_shape), stats

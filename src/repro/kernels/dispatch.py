@@ -1,0 +1,270 @@
+"""Kernel dispatch: routes quantized matmuls onto the fused Pallas path.
+
+This is the production entry point for the DFXP matmul family.  It owns
+four concerns the kernels themselves stay agnostic of:
+
+  * **differentiability** — :func:`fused_dot` wraps the forward kernel in
+    a ``jax.custom_vjp`` whose backward runs two more Pallas kernels:
+    dgrad (``q_g(ct) @ q(B)^T``, layout ``nt``) and wgrad
+    (``q(A)^T @ q_g(ct)``, layout ``tn``), with the cotangent's DFXP
+    rounding fused into the tile loads (``grad_width``), matching the
+    ``qbound`` numerics;
+  * **shape collapsing** — batched/ND left operands ``[..., K]`` are
+    flattened to ``[M, K]`` around the kernel call (reshape is exact and
+    linear, so autodiff through it is free);
+  * **block selection** — shape-bucketed, with a small measured autotune
+    cache: on compiled backends the first matmul in a bucket times a
+    handful of candidate tilings on dummy operands and the winner is
+    cached; in interpret mode (no real perf to measure) the shared
+    heuristic is cached instead;
+  * **backend detection** — compiled Pallas on TPU, interpret elsewhere,
+    resolved once per process (``_tiling.default_interpret``).
+
+``QTape.dot`` calls :func:`tape_dot` when the policy enables the fused
+path (``PrecisionPolicy.fused_matmul``); numerics are bit-identical to
+the ``ste_quant`` + ``jnp.matmul`` composite it replaces.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._tiling import (default_interpret, mm_blocks,
+                                   resolve_interpret, round_up)
+from repro.kernels.qmatmul.ops import qmm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed block selection with a measured autotune cache
+# ---------------------------------------------------------------------------
+
+# Candidate (block_r, block_c, block_d) tilings tried by the autotuner,
+# filtered per shape to fit the operands and a VMEM budget.
+_CANDIDATES = [
+    (128, 128, 128), (128, 128, 256), (128, 128, 512),
+    (128, 256, 128), (256, 128, 128), (256, 256, 128),
+    (128, 256, 256), (512, 128, 128), (128, 512, 128),
+]
+_VMEM_BUDGET = 8 * 1024 * 1024  # bytes of f32 tiles per grid step
+
+_AUTOTUNE: Dict[str, object] = {"measure": True, "reps": 3}
+_BLOCK_CACHE: Dict[tuple, Tuple[int, int, int]] = {}
+
+
+def _bucket(n: int) -> int:
+    """Round up to the next power of two (min 8) — the cache granularity."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def autotune_cache() -> Dict[tuple, Tuple[int, int, int]]:
+    """The live {(kind, R̂, Ĉ, D̂): blocks} cache (mutable; compiled path
+    only — interpret mode always uses exact full-shape blocks)."""
+    return _BLOCK_CACHE
+
+
+def reset_autotune() -> None:
+    _BLOCK_CACHE.clear()
+
+
+def set_autotune(measure: Optional[bool] = None,
+                 reps: Optional[int] = None) -> None:
+    if measure is not None:
+        _AUTOTUNE["measure"] = measure
+    if reps is not None:
+        _AUTOTUNE["reps"] = reps
+
+
+def _fits(blocks, R, C, D) -> bool:
+    br, bc, bd = blocks
+    # reject blocks larger than the 128-aligned problem (candidates are
+    # all 128-multiples, so this is "no pure-padding tiles")
+    if (br > round_up(R, 128) or bc > round_up(C, 128)
+            or bd > round_up(D, 128)):
+        return False
+    vmem = 4 * (br * bd + bd * bc + 2 * br * bc)
+    return vmem <= _VMEM_BUDGET
+
+
+def _measure(kind: str, R: int, C: int, D: int, width) -> tuple:
+    """Time candidate tilings on dummy operands; return the fastest."""
+    if kind == "nn":
+        sa, sb = (R, D), (D, C)
+    elif kind == "nt":
+        sa, sb = (R, D), (C, D)
+    else:
+        sa, sb = (D, R), (D, C)
+    a = jnp.zeros(sa, jnp.float32)
+    b = jnp.zeros(sb, jnp.float32)
+    e = jnp.float32(0.0)
+    best, best_t = None, float("inf")
+    reps = max(1, int(_AUTOTUNE["reps"]))
+    cands = [c for c in _CANDIDATES if _fits(c, R, C, D)]
+    if not cands:
+        cands = [mm_blocks(kind, R, C, D)]
+    for blocks in cands:
+        fn = lambda: qmm(a, b, e, e, kind=kind, width_a=width,
+                         width_b=width, blocks=blocks, interpret=False)
+        try:
+            jax.block_until_ready(fn())  # compile
+        except Exception:  # tiling rejected by the compiler — skip
+            continue
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        t = time.perf_counter() - t0
+        if t < best_t:
+            best, best_t = blocks, t
+    return best or mm_blocks(kind, R, C, D)
+
+
+def blocks_for(kind: str, R: int, C: int, D: int, *, interpret: bool,
+               width=10) -> tuple:
+    """Cached block choice for a shape bucket (measured on compiled TPU).
+
+    In interpret mode the blocks are the exact operand dims (one grid
+    step, zero padding): the kernel body then executes literally the
+    composite's dot on the composite's shapes, which is what makes the
+    fused path *bit*-identical to the jnp composite — f32 accumulation
+    order on CPU backends depends on operand shapes, so padding or
+    splitting the reduction would drift ULPs on raw (straight-through)
+    operands.  Compiled TPU tilings come from the measured autotune
+    cache instead; there the MXU accumulation contract is the spec.
+    """
+    if interpret:
+        return R, C, D
+    key = (kind, _bucket(R), _bucket(C), _bucket(D))
+    blocks = _BLOCK_CACHE.get(key)
+    if blocks is None:
+        if _AUTOTUNE["measure"]:
+            blocks = _measure(kind, key[1], key[2], key[3], width)
+        else:
+            blocks = mm_blocks(kind, R, C, D)
+        _BLOCK_CACHE[key] = blocks
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# differentiable fused matmul
+# ---------------------------------------------------------------------------
+
+def _qmm_auto(a, b, e_a, e_b, *, kind, width_a, width_b, cast, out_dtype,
+              interpret):
+    """qmm with dispatch-selected blocks for the (collapsed) 2D shapes."""
+    if kind == "nn":
+        (R, D), C = a.shape, b.shape[1]
+    elif kind == "nt":
+        (R, D), C = a.shape, b.shape[0]
+    else:
+        (D, R), C = a.shape, b.shape[1]
+    blocks = blocks_for(kind, R, C, D, interpret=interpret,
+                        width=width_a or width_b)
+    return qmm(a, b, e_a, e_b, kind=kind, width_a=width_a, width_b=width_b,
+               blocks=blocks, cast=cast, out_dtype=out_dtype,
+               interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fused(width_a, width_b, grad_width, transpose_b: bool,
+                cast, interpret: bool):
+    """Build the custom-VJP fused matmul for one static configuration.
+
+    Forward: ``q(a) @ q(b)`` (or ``q(a) @ q(b)^T`` with ``transpose_b``),
+    each quantization optional (``width=None`` → raw operand, matching
+    the straight-through composite).  Backward (STE through the operand
+    rounding, quantized co-operands):
+
+        da = q_g(ct) @ q(b)[^T]          db = q(a)^T @ q_g(ct)
+
+    with ``q_g`` the optional ``grad_width`` cotangent rounding.
+    """
+    fwd_kind = "nt" if transpose_b else "nn"
+
+    def _forward(a, b, e_a, e_b):
+        return _qmm_auto(a, b, e_a, e_b, kind=fwd_kind, width_a=width_a,
+                         width_b=width_b, cast=cast, out_dtype=a.dtype,
+                         interpret=interpret)
+
+    @jax.custom_vjp
+    def fused(a, b, e_a, e_b, e_g):
+        del e_g
+        return _forward(a, b, e_a, e_b)
+
+    def fwd(a, b, e_a, e_b, e_g):
+        return _forward(a, b, e_a, e_b), (a, b, e_a, e_b, e_g)
+
+    def bwd(res, ct):
+        a, b, e_a, e_b, e_g = res
+        if transpose_b:
+            # y[M,V] = qa[M,D] @ qb[V,D]^T
+            da = _qmm_auto(ct, b, e_g, e_b, kind="nn", width_a=grad_width,
+                           width_b=width_b, cast=cast, out_dtype=a.dtype,
+                           interpret=interpret)
+            db = _qmm_auto(ct, a, e_g, e_a, kind="tn", width_a=grad_width,
+                           width_b=width_a, cast=cast, out_dtype=b.dtype,
+                           interpret=interpret)
+        else:
+            # y[M,N] = qa[M,K] @ qb[K,N]
+            da = _qmm_auto(ct, b, e_g, e_b, kind="nt", width_a=grad_width,
+                           width_b=width_b, cast=cast, out_dtype=a.dtype,
+                           interpret=interpret)
+            db = _qmm_auto(a, ct, e_a, e_g, kind="tn", width_a=width_a,
+                           width_b=grad_width, cast=cast, out_dtype=b.dtype,
+                           interpret=interpret)
+        return (da, db, jnp.zeros_like(e_a), jnp.zeros_like(e_b),
+                jnp.zeros_like(e_g))
+
+    fused.defvjp(fwd, bwd)
+    return fused
+
+
+def fused_dot(a, b, e_a, e_b, *, width: int, grad_width: Optional[int] = None,
+              e_g=0.0, quant_a: bool = True, quant_b: bool = True,
+              transpose_b: bool = False, cast=jnp.float32,
+              interpret: Optional[bool] = None) -> Array:
+    """Differentiable fused DFXP matmul ``q(a) @ q(b)[^T]``.
+
+    ``a``: [..., K] (leading dims collapsed around the kernel), ``b``:
+    [K, N] (or [N, K] with ``transpose_b``).  ``grad_width`` enables the
+    fused cotangent rounding (exponent ``e_g``) in both backward kernels;
+    ``quant_a=False`` / ``quant_b=False`` pass that operand through raw —
+    the straight-through composite contract used by ``QTape.dot``.
+    """
+    interpret = resolve_interpret(interpret)
+    f = _make_fused(width if quant_a else None, width if quant_b else None,
+                    grad_width, transpose_b, cast, interpret)
+    e_a = jnp.asarray(e_a, jnp.float32)
+    e_b = jnp.asarray(e_b, jnp.float32)
+    e_g = jnp.asarray(e_g, jnp.float32)
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1]) if a.ndim != 2 else a
+    y = f(a2, b, e_a, e_b, e_g)
+    return y.reshape(*lead, y.shape[-1]) if a.ndim != 2 else y
+
+
+def tape_dot(x, w, e_w, *, width: int, transpose_b: bool = False,
+             interpret: Optional[bool] = None) -> Array:
+    """The ``QTape.dot`` fused path: raw activations × quantized weight.
+
+    Bit-identical to the composite ``jnp.matmul(x, ste_quant(w))`` — the
+    activation operand and the backward cotangent are *not* re-rounded
+    here (the surrounding ``tape.act`` sites already hold them on the
+    DFXP grid), and the weight gradient passes straight through, exactly
+    like ``ste_quant``'s identity backward.
+    """
+    return fused_dot(x, w, 0.0, e_w, width=width, quant_a=False,
+                     transpose_b=transpose_b, cast=x.dtype,
+                     interpret=interpret)
+
+
+__all__ = ["fused_dot", "tape_dot", "blocks_for", "autotune_cache",
+           "reset_autotune", "set_autotune", "default_interpret"]

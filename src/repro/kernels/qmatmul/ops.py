@@ -1,4 +1,11 @@
-"""jit'd wrapper for the quantized matmul kernel: padding + block choice."""
+"""jit'd wrappers for the quantized matmul kernels: padding + scale packing.
+
+Any-shape 2D operands are zero-padded up to block multiples (pads quantize
+to 0 and contribute exactly 0.0 to the f32 accumulation) and the result is
+sliced back.  Block sizes come from the caller — normally the autotuned
+dispatch layer (:mod:`repro.kernels.dispatch`); ``None`` falls back to the
+shared heuristic in :mod:`repro.kernels._tiling`.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,24 +13,64 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .qmatmul_kernel import qmatmul_2d
+from repro.kernels._tiling import (mm_blocks, pad2d, resolve_interpret,
+                                   round_up)
+
+from .qmatmul_kernel import qmm_2d
 
 
-def _round_up(x, m):
-    return (x + m - 1) // m * m
+def _pack_scales(e_a, e_b, width_a, width_b):
+    """(1, 4) [step_a, 1/step_a, step_b, 1/step_b]; 1.0 for raw operands."""
+    from repro.core.quant import exact_pow2
+    one = jnp.float32(1.0)
+
+    def pair(e, width):
+        if width is None:
+            return one, one
+        e = jnp.asarray(e, jnp.float32)
+        return exact_pow2(e), exact_pow2(-e)
+
+    sa, ia = pair(e_a, width_a)
+    sb, ib = pair(e_b, width_b)
+    return jnp.stack([sa, ia, sb, ib]).reshape(1, 4)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "interpret"))
-def qmatmul(a, b, e_a, e_b, *, width: int = 10, interpret: bool = True):
-    """DFXP matmul ``q(a) @ q(b)`` with f32 accumulation. Any [M,K]x[K,N]."""
-    M, K = a.shape
-    _, N = b.shape
-    bm = min(128, _round_up(M, 8))
-    bn = min(128, _round_up(N, 128))
-    bk = min(128, _round_up(K, 128))
-    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
-    ap = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
-    bp = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
-    c = qmatmul_2d(ap, bp, e_a, e_b, width=width, block_m=bm, block_n=bn,
-                   block_k=bk, interpret=interpret)
-    return c[:M, :N]
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "width_a", "width_b", "blocks", "cast", "out_dtype",
+    "interpret"))
+def qmm(a, b, e_a, e_b, *, kind: str, width_a, width_b, blocks=None,
+        cast=jnp.float32, out_dtype=None, interpret=None):
+    """Quantized matmul on any-shape 2D operands; see ``qmm_2d`` layouts."""
+    interpret = resolve_interpret(interpret)
+    if kind == "nn":
+        (R, D), (D2, C) = a.shape, b.shape
+    elif kind == "nt":
+        (R, D), (C, D2) = a.shape, b.shape
+    else:  # tn
+        (D, R), (D2, C) = a.shape, b.shape
+    assert D == D2, f"contraction dims disagree: {a.shape} x {b.shape} ({kind})"
+    if blocks is None:
+        blocks = mm_blocks(kind, R, C, D)
+    br, bc, bd = blocks
+    Rp, Cp, Dp = round_up(R, br), round_up(C, bc), round_up(D, bd)
+    if kind == "nn":
+        ap, bp = pad2d(a, Rp, Dp), pad2d(b, Dp, Cp)
+    elif kind == "nt":
+        ap, bp = pad2d(a, Rp, Dp), pad2d(b, Cp, Dp)
+    else:
+        ap, bp = pad2d(a, Dp, Rp), pad2d(b, Dp, Cp)
+    scales = _pack_scales(e_a, e_b, width_a, width_b)
+    c = qmm_2d(ap, bp, scales, kind=kind, width_a=width_a, width_b=width_b,
+               block_r=br, block_c=bc, block_d=bd, cast=cast,
+               out_dtype=out_dtype, interpret=interpret)
+    return c[:R, :C]
+
+
+def qmatmul(a, b, e_a, e_b, *, width: int = 10, interpret=None):
+    """DFXP matmul ``q(a) @ q(b)`` with f32 accumulation. Any [M,K]x[K,N].
+
+    ``interpret=None`` auto-detects the backend (compiled on TPU,
+    interpret elsewhere).
+    """
+    return qmm(a, b, e_a, e_b, kind="nn", width_a=width, width_b=width,
+               interpret=interpret)

@@ -38,7 +38,8 @@ def build_policy(args) -> PrecisionPolicy:
         arithmetic=args.arithmetic, comp_width=args.comp_width,
         update_width=args.update_width, update_interval=args.update_interval,
         storage=args.storage,
-        max_overflow_rate=args.max_overflow_rate)
+        max_overflow_rate=args.max_overflow_rate,
+        fused_matmul=getattr(args, "fused_matmul", False))
 
 
 def main(argv=None):
@@ -57,6 +58,10 @@ def main(argv=None):
     ap.add_argument("--update-interval", type=int, default=20)
     ap.add_argument("--max-overflow-rate", type=float, default=1e-4)
     ap.add_argument("--storage", default="sim", choices=["sim", "packed"])
+    ap.add_argument("--fused-matmul", action="store_true",
+                    help="route QTape.dot through the fused Pallas qmatmul "
+                         "(fwd+dgrad+wgrad custom-VJP kernels; bit-identical "
+                         "to the composite, compiled on TPU)")
     ap.add_argument("--calibrate-steps", type=int, default=5)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=0.01)

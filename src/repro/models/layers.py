@@ -348,13 +348,18 @@ def init_maxout(key, d_in: int, d_out: int, k: int) -> dict:
 
 
 def maxout(params, x: Array, tape: QTape, prefix: str) -> Array:
-    """h_i = max_j (b_ij + w_ij · x) — the paper's hidden unit."""
-    k = params["w"].shape[0]
-    outs = []
-    for j in range(k):
-        z = tape.dot(f"{prefix}/w", x, params["w"][j]) + params["b"][j]
-        outs.append(z)
-    h = jnp.max(jnp.stack(outs, axis=0), axis=0)
+    """h_i = max_j (b_ij + w_ij · x) — the paper's hidden unit.
+
+    The k affine maps run as ONE [d_in, k·d_out] matmul (a single
+    tile-friendly shape on the fused kernel path) followed by a
+    reshape/max — same values and quantization statistics as k separate
+    ``tape.dot`` calls, one kernel launch instead of k.
+    """
+    k, d_in, d_out = params["w"].shape
+    w2 = params["w"].transpose(1, 0, 2).reshape(d_in, k * d_out)
+    b2 = params["b"].reshape(k * d_out)
+    z = tape.dot(f"{prefix}/w", x, w2) + b2
+    h = jnp.max(z.reshape(z.shape[:-1] + (k, d_out)), axis=-2)
     return tape.act(f"{prefix}/out", h)
 
 
@@ -372,11 +377,9 @@ def embed(table: Array, tokens: Array, tape: QTape) -> Array:
 
 
 def lm_head(table_or_w: Array, x: Array, tape: QTape, *, tied: bool) -> Array:
-    w = tape.weight("head/w", table_or_w)
-    if tied:
-        logits = jnp.einsum("bsd,vd->bsv", x, w,
-                            preferred_element_type=jnp.float32)
-    else:
-        logits = jnp.einsum("bsd,dv->bsv", x, w,
-                            preferred_element_type=jnp.float32)
-    return tape.act("head/logits", logits.astype(x.dtype))
+    """Vocabulary projection through ``tape.dot`` (fused-kernel capable).
+
+    Tied heads contract against the embedding table's last dim
+    (``transpose_b`` — the dgrad-layout kernel on the fused path)."""
+    logits = tape.dot("head/w", x, table_or_w, transpose_b=tied)
+    return tape.act("head/logits", logits)
