@@ -6,10 +6,12 @@
 # Kernel rows report microseconds per call; ``derived`` is MFLOP for
 # matmuls. Run with: PYTHONPATH=src python -m benchmarks.run [--quick]
 #
-# The kernels suite additionally persists its rows to ``BENCH_kernels.json``
-# (jnp-composite vs fused Pallas pairs for quantize, qmatmul fwd, dgrad,
-# wgrad, and the full train step) — the perf-trajectory record; ``--tiny``
-# shrinks it to CI-smoke shapes that assert execution, not perf.
+# JSON-emitting suites each persist their rows to a per-suite file —
+# ``kernels`` → BENCH_kernels.json (jnp-composite vs fused Pallas pairs),
+# ``serve`` → BENCH_serve.json (sequential vs continuous-batched,
+# f32 vs packed-cache tok/s) — the perf-trajectory record; ``--tiny``
+# shrinks both to CI-smoke shapes that assert execution, not perf.
+# ``--json-out`` overrides the path when exactly one such suite runs.
 import argparse
 import json
 import sys
@@ -21,28 +23,36 @@ def main() -> None:
                     help="table3 + kernels only")
     ap.add_argument("--only", default="")
     ap.add_argument("--tiny", action="store_true",
-                    help="CI-smoke shapes for the kernels suite")
-    ap.add_argument("--json-out", default="BENCH_kernels.json",
-                    help="where the kernels suite writes its JSON rows")
+                    help="CI-smoke shapes for the kernels/serve suites")
+    ap.add_argument("--json-out", default="",
+                    help="override the JSON path (needs exactly one "
+                         "JSON-emitting suite selected, e.g. --only serve)")
     args = ap.parse_args()
 
-    from . import kernels_bench, paper_tables
+    from . import kernels_bench, paper_tables, serve_bench
 
     suites = [
-        ("table3", paper_tables.table3_formats),
-        ("fig1", paper_tables.fig1_radix),
-        ("fig2", paper_tables.fig2_comp_width),
-        ("fig3", paper_tables.fig3_update_width),
-        ("fig4", paper_tables.fig4_overflow_rate),
-        ("kernels", lambda: kernels_bench.run(tiny=args.tiny)),
+        ("table3", paper_tables.table3_formats, None),
+        ("fig1", paper_tables.fig1_radix, None),
+        ("fig2", paper_tables.fig2_comp_width, None),
+        ("fig3", paper_tables.fig3_update_width, None),
+        ("fig4", paper_tables.fig4_overflow_rate, None),
+        ("kernels", lambda: kernels_bench.run(tiny=args.tiny),
+         "BENCH_kernels.json"),
+        ("serve", lambda: serve_bench.run(tiny=args.tiny),
+         "BENCH_serve.json"),
     ]
     if args.quick:
         suites = [s for s in suites if s[0] in ("table3", "kernels")]
     if args.only:
         suites = [s for s in suites if s[0] in args.only.split(",")]
+    json_suites = [name for name, _, path in suites if path]
+    if args.json_out and len(json_suites) != 1:
+        ap.error(f"--json-out needs exactly one JSON-emitting suite "
+                 f"selected, got {json_suites}")
 
     print("name,us_per_call,derived")
-    for name, fn in suites:
+    for name, fn, json_path in suites:
         try:
             rows = list(fn())
             for row in rows:
@@ -50,17 +60,18 @@ def main() -> None:
         except Exception as e:  # keep the suite running
             print(f"{name}/ERROR,0,0  # {e}", file=sys.stderr)
             raise
-        if name == "kernels" and args.json_out:
+        if json_path:
             import jax
+            out_path = args.json_out or json_path
             payload = {
                 "meta": {"backend": jax.default_backend(),
-                         "tiny": args.tiny},
+                         "suite": name, "tiny": args.tiny},
                 "rows": [{"name": n, "us_per_call": round(us, 1),
                           "derived": d} for n, us, d in rows],
             }
-            with open(args.json_out, "w") as f:
+            with open(out_path, "w") as f:
                 json.dump(payload, f, indent=1)
-            print(f"# wrote {len(rows)} kernel rows -> {args.json_out}",
+            print(f"# wrote {len(rows)} {name} rows -> {out_path}",
                   file=sys.stderr)
 
 

@@ -1,4 +1,9 @@
-"""Serve a DFXP-quantized model with batched requests (prefill + decode).
+"""Continuous-batching serving with mixed-length prompts + int8 KV cache.
+
+Six requests with three different prompt lengths share four slots: equal
+lengths prefill together, the rest queue and get admitted as decoding
+slots free up. The KV pool stores int8 DFXP mantissas with per-slot
+controller-managed scales.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -7,5 +12,6 @@ from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
     serve_main(["--arch", "llama3_8b", "--smoke", "--arithmetic", "dfxp",
-                "--num-requests", "4", "--prompt-len", "32",
-                "--max-new", "16"])
+                "--num-requests", "6", "--slots", "4",
+                "--prompt-len", "8,16,32", "--max-new", "16",
+                "--cache-bits", "8"])

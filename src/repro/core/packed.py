@@ -48,11 +48,29 @@ class PackedArray:
         return self.mantissa.size
 
 
+def qrange(width: int):
+    """(qmax, qmin) of a two's-complement ``width``-bit mantissa."""
+    return float(2 ** (width - 1) - 1), -float(2 ** (width - 1))
+
+
+def _overflow_counts(m: Array, width: int, axes=None):
+    """(n_ovf, n_ovf_at_half_scale) over ``axes`` — the §5 controller pair.
+
+    Counting matches ``quant.fixed_round``, including the asymmetric
+    two's-complement range: ``qmin = -(qmax + 1)`` is representable and
+    must not count as overflow.
+    """
+    qmax, qmin = qrange(width)
+    ovf = jnp.sum((m > qmax) | (m < qmin), axis=axes, dtype=jnp.float32)
+    ovfh = jnp.sum((m > qmax / 2) | (m < qmin / 2), axis=axes,
+                   dtype=jnp.float32)
+    return ovf, ovfh
+
+
 def pack(x: Array, width: int, e: Array, *, stochastic_key=None) -> PackedArray:
     e = jnp.asarray(e, jnp.float32)
     step = exact_pow2(e)
-    qmax = float(2 ** (width - 1) - 1)
-    qmin = -float(2 ** (width - 1))
+    qmax, qmin = qrange(width)
     m = x.astype(jnp.float32) / step
     if stochastic_key is not None:
         u = jax.random.uniform(stochastic_key, m.shape, jnp.float32)
@@ -63,6 +81,33 @@ def pack(x: Array, width: int, e: Array, *, stochastic_key=None) -> PackedArray:
     return PackedArray(m.astype(container_dtype(width)), e, width)
 
 
+def pack_rows(x: Array, width: int, e: Array, *, stochastic_keys=None):
+    """Per-row pack with per-row overflow statistics.
+
+    ``x``: [B, ...]; ``e``: [B] log2-steps; ``stochastic_keys``: optional
+    [B, 2] PRNG keys giving every row an independent rounding stream.
+    Returns ``(mantissa int[B, ...], stats f32[B, 3])`` where stats is the
+    ``(n_overflow, n_overflow_at_half_scale, n_total)`` triple per row —
+    what the serve-time KV-cache controller accumulates per slot.
+    """
+    qmax, qmin = qrange(width)
+    e = jnp.asarray(e, jnp.float32)
+    step = exact_pow2(e).reshape(e.shape + (1,) * (x.ndim - 1))
+    m = x.astype(jnp.float32) / step
+    if stochastic_keys is not None:
+        u = jax.vmap(lambda k: jax.random.uniform(k, m.shape[1:]))(
+            stochastic_keys)
+        m = jnp.floor(m + u)
+    else:
+        m = jnp.round(m)
+    axes = tuple(range(1, x.ndim))
+    ovf, ovfh = _overflow_counts(m, width, axes=axes)
+    total = jnp.full(ovf.shape, float(m[0].size), jnp.float32)
+    stats = jnp.stack([ovf, ovfh, total], axis=-1)
+    m = jnp.clip(m, qmin, qmax).astype(container_dtype(width))
+    return m, stats
+
+
 def unpack(p: PackedArray, dtype=jnp.float32) -> Array:
     return (p.mantissa.astype(jnp.float32) * exact_pow2(p.exp)).astype(dtype)
 
@@ -70,8 +115,6 @@ def unpack(p: PackedArray, dtype=jnp.float32) -> Array:
 def pack_overflow_stats(x: Array, width: int, e: Array) -> Array:
     """Same (ovf, ovf_half, total) triple as quant.fixed_round, for packing."""
     e = jnp.asarray(e, jnp.float32)
-    qmax = float(2 ** (width - 1) - 1)
     m = jnp.round(x.astype(jnp.float32) / exact_pow2(e))
-    ovf = jnp.sum(jnp.abs(m) > qmax, dtype=jnp.float32)
-    ovfh = jnp.sum(jnp.abs(m) > qmax / 2, dtype=jnp.float32)
+    ovf, ovfh = _overflow_counts(m, width)
     return jnp.stack([ovf, ovfh, jnp.float32(x.size)])

@@ -66,7 +66,16 @@ def controller_step(
     max_overflow_rate: float,
     apply: Array,
 ) -> ScaleState:
-    """Apply the paper's rule where ``apply`` (bool scalar) is true; reset acc."""
+    """Apply the paper's rule where ``apply`` is true; reset acc.
+
+    ``apply`` is a bool scalar (the training cadence) or an array
+    broadcastable to each group's exponent shape (e.g. per-slot ``[B]``
+    for the serve-time KV-cache groups, where every slot runs its own
+    append counter).
+    """
+    apply = jnp.asarray(apply)
+    # acc carries a trailing stats axis the exponents don't have
+    apply_acc = apply if apply.ndim == 0 else apply[..., None]
     new_exps, new_acc = {}, {}
     for name, e in state.exps.items():
         a = state.acc[name]
@@ -81,7 +90,7 @@ def controller_step(
         delta = jnp.where(a[..., 2] > 0, delta, 0.0)
         e_new = jnp.clip(e + delta, E_MIN, E_MAX)
         new_exps[name] = jnp.where(apply, e_new, e)
-        new_acc[name] = jnp.where(apply, jnp.zeros_like(a), a)
+        new_acc[name] = jnp.where(apply_acc, jnp.zeros_like(a), a)
     return ScaleState(exps=new_exps, acc=new_acc)
 
 

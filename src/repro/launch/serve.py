@@ -1,16 +1,21 @@
-"""Serving driver: batched prefill + decode with a DFXP-quantized model.
+"""Serving CLI over the ``repro.serve`` continuous-batching engine.
 
-A minimal continuous-batching engine: requests queue up, are prefilled in
-batches, then decode in lockstep; finished sequences free their slots for
-waiting requests. CPU-runnable with --smoke.
+Mixed-length prompts, per-request budgets, greedy/temperature/top-k
+sampling, and an optionally DFXP-packed KV-cache pool:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
-      --num-requests 4 --max-new 16
+      --num-requests 4 --prompt-len 8,16,32 --max-new 16 --cache-bits 8
+
+``Engine`` below is the *lockstep reference*: batched prefill, then every
+sequence decodes the same number of steps at one shared position. It frees
+no slots and admits nothing mid-decode — kept (batch is implied by the
+prompts' shape) because its greedy tokens are the bit-for-bit anchor the
+float32-mode ``repro.serve.ServeEngine`` is tested against.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
@@ -19,14 +24,15 @@ from repro import configs
 from repro.core import ScaleState
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
+from repro.serve import SamplerConfig, ServeEngine
 
 
 class Engine:
-    """Batched decode engine over the functional model."""
+    """Lockstep reference: batched prefill + fixed-step greedy decode."""
 
-    def __init__(self, cfg, policy, params, *, max_len: int, batch: int):
+    def __init__(self, cfg, policy, params, *, max_len: int):
         self.cfg, self.policy, self.params = cfg, policy, params
-        self.max_len, self.batch = max_len, batch
+        self.max_len = max_len
         gs = T.group_shapes(cfg)
         self.exps = ScaleState.create(gs, -6.0).exps
         self.sinks = {n: jnp.zeros(s + (3,), jnp.float32)
@@ -47,8 +53,8 @@ class Engine:
                                          self.sinks)
         return logits, cache
 
-    def generate(self, prompts: jnp.ndarray, max_new: int, greedy=True):
-        """``prompts``: [B, S] token ids. Returns [B, max_new]."""
+    def generate(self, prompts: jnp.ndarray, max_new: int):
+        """``prompts``: [B, S] token ids. Returns [B, max_new] (greedy)."""
         B, S = prompts.shape
         logits, cache = self._prefill(prompts)
         outs = []
@@ -60,30 +66,56 @@ class Engine:
         return jnp.stack(outs, axis=1)
 
 
+def _parse_lens(spec: str):
+    return [int(x) for x in spec.split(",") if x]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--arithmetic", default="dfxp")
     ap.add_argument("--num-requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="concurrent slots (default: min(num-requests, 4))")
+    ap.add_argument("--prompt-len", default="32",
+                    help="prompt length, or comma list cycled over requests "
+                         "(mixed lengths prefill as separate length groups)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-bits", type=int, default=0, choices=(0, 8, 16),
+                    help="KV-cache storage: 0=float32, 8/16=DFXP-packed "
+                         "mantissas with per-slot controller-managed scales")
+    ap.add_argument("--sampler", default="greedy",
+                    choices=("greedy", "temperature", "top_k"))
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     policy = PrecisionPolicy(args.arithmetic)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, policy, params, max_len=args.prompt_len + args.max_new,
-                 batch=args.num_requests)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.num_requests, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    out = eng.generate(prompts, args.max_new)
-    dt = time.time() - t0
-    toks = args.num_requests * args.max_new
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s batched)")
+    lens = _parse_lens(args.prompt_len)
+    slots = args.slots or min(args.num_requests, 4)
+    scfg = SamplerConfig(kind=args.sampler, temperature=args.temperature,
+                         top_k=args.top_k if args.sampler == "top_k" else 0)
+    eng = ServeEngine(cfg, policy, params, max_slots=slots,
+                      max_len=max(lens) + args.max_new,
+                      cache_bits=args.cache_bits, sampler_cfg=scfg,
+                      seed=args.seed)
+    for i in range(args.num_requests):
+        plen = lens[i % len(lens)]
+        prompt = jax.random.randint(jax.random.PRNGKey(1000 + i), (plen,), 0,
+                                    cfg.vocab_size)
+        eng.submit(prompt, max_new=args.max_new)
+    out = eng.run()
+    stats = eng.stats()
+    print(f"served {stats['requests_finished']} requests, "
+          f"{stats['new_tokens']} tokens in {stats['wall_s']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s, "
+          f"ttft mean {stats['ttft_mean_s'] * 1e3:.0f}ms)")
+    print("stats:", json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                                for k, v in stats.items()}))
     print("sample:", out[0][:8].tolist())
     return out
 

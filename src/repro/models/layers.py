@@ -253,14 +253,46 @@ def attention_prefill(params, spec: AttnSpec, x: Array, positions: Array,
     return tape.act(f"{prefix}/out", y), (k, v)
 
 
-def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
-                     cache_k: Array, cache_v: Array, cache_pos: Array,
-                     tape: QTape, prefix: str, window=None, dist=None):
-    """One-token decode. ``x``: [B, 1, D]; cache: [B, W, K, hd] (ring buffer).
+class RawKVCodec:
+    """Float-container KV-cache codec: today's ring buffer, verbatim.
 
-    Writes the new token's K/V into slot ``pos % W`` (so the token attends to
-    itself), then attends over the whole buffer with a position-validity
-    mask. Returns ``(y, cache_k', cache_v', cache_pos')``.
+    The codec protocol is the decode cache's storage contract:
+    ``append(entry, k_new, v_new, pos)`` writes one token's K/V into slot
+    ``pos % W`` and returns the updated entry; ``load(entry)`` returns
+    ``(k, v, pos)`` as wide arrays for the attention math. Alternative
+    codecs (``repro.serve.kv_pool.PackedKVCodec``) store int mantissas +
+    per-slot DFXP exponents and quantize/dequantize at this boundary.
+    """
+
+    def append(self, entry: dict, k_new: Array, v_new: Array,
+               pos: Array) -> dict:
+        """``k_new``/``v_new``: [B, K, hd]; ``pos``: [B] int32."""
+        W = entry["k"].shape[1]
+        slot = (pos % W).astype(jnp.int32)
+        bidx = jnp.arange(pos.shape[0])
+        return {"k": entry["k"].at[bidx, slot].set(k_new),
+                "v": entry["v"].at[bidx, slot].set(v_new),
+                "pos": entry["pos"].at[bidx, slot].set(
+                    pos.astype(jnp.int32))}
+
+    def load(self, entry: dict):
+        return entry["k"], entry["v"], entry["pos"]
+
+
+RAW_KV_CODEC = RawKVCodec()
+
+
+def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
+                     cache: dict, tape: QTape, prefix: str, window=None,
+                     dist=None, codec=None):
+    """One-token decode. ``x``: [B, 1, D]; ``cache``: a codec-owned entry
+    (default: ``{"k","v","pos"}`` float ring buffers ``[B, W, ...]``).
+
+    Appends the new token's K/V through the codec (slot ``pos % W``, so the
+    token attends to itself), then attends over the whole buffer with a
+    position-validity mask. ``pos`` may be a scalar or a per-sequence
+    ``[B]``/``[B,1]`` vector — each slot decodes at its own position.
+    Returns ``(y, cache')``.
 
     When ``dist.cp_decode`` is set (long-context serving: the cache window
     axis is sharded over ``dist.cp_axis``), the global (non-windowed)
@@ -268,15 +300,17 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     :func:`repro.dist.cp_attention.cp_decode_attention` — each shard
     attends over its local slots and softmax statistics merge exactly.
     """
+    codec = codec or RAW_KV_CODEC
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos, (B, 1)) if jnp.ndim(pos) == 0 else pos
+    if jnp.ndim(pos) == 0:
+        positions = jnp.broadcast_to(pos, (B, 1))
+    elif jnp.ndim(pos) == 1:
+        positions = pos[:, None]
+    else:
+        positions = pos
     q, k_new, v_new = _qkv(params, spec, x, positions, tape, prefix)
-    W = cache_k.shape[1]
-    slot = (positions[:, 0] % W).astype(jnp.int32)          # [B]
-    bidx = jnp.arange(B)
-    cache_k = cache_k.at[bidx, slot].set(k_new[:, 0])
-    cache_v = cache_v.at[bidx, slot].set(v_new[:, 0])
-    cache_pos = cache_pos.at[bidx, slot].set(positions[:, 0])
+    cache = codec.append(cache, k_new[:, 0], v_new[:, 0], positions[:, 0])
+    cache_k, cache_v, cache_pos = codec.load(cache)
     H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     G = H // K
     scale = 1.0 / math.sqrt(hd)
@@ -300,7 +334,7 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
                        preferred_element_type=jnp.float32)
         o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
     y = tape.dot(f"{prefix}/wo", o, params["wo"])
-    return tape.act(f"{prefix}/out", y), cache_k, cache_v, cache_pos
+    return tape.act(f"{prefix}/out", y), cache
 
 
 # ---------------------------------------------------------------------------

@@ -309,7 +309,7 @@ def _ring_cache(k: Array, v: Array, cap: int):
 
 def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
                  tape: QTape, dist: DistCtx, memory, mode: str,
-                 cache_in=None, max_cache_len: int = 0):
+                 cache_in=None, max_cache_len: int = 0, kv_codec=None):
     """Apply one sub-block (pre-norm residual). Returns (x, cache_out)."""
     h = L.rmsnorm(x, bp["norm"])
     cache_out = None
@@ -352,10 +352,9 @@ def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
                 y = _xattn_decode(bp, spec, h, cache_in, tape, pfx)
                 cache_out = cache_in
             else:
-                y, ck, cv, cp = L.attention_decode(
-                    bp, spec, h, positions, cache_in["k"], cache_in["v"],
-                    cache_in["pos"], tape, pfx, window=window, dist=dist)
-                cache_out = {"k": ck, "v": cv, "pos": cp}
+                y, cache_out = L.attention_decode(
+                    bp, spec, h, positions, cache_in, tape, pfx,
+                    window=window, dist=dist, codec=kv_codec)
     elif blk.kind == "ffn":
         if cfg.ffn_kind == "swiglu":
             y = L.swiglu(bp, h, tape, pfx)
@@ -401,7 +400,7 @@ def _xattn_decode(bp, spec, h, cache, tape, pfx):
 
 def _run_stage(cfg, policy, stage: Stage, sp, x, positions, scales, sinks,
                dist, memory, mode: str, cache=None, remat: str = "none",
-               max_cache_len: int = 0):
+               max_cache_len: int = 0, kv_codec=None):
     """Scan one stage. Returns (x, stats, cache_out)."""
     stacked_names = _stage_group_names(cfg, stage, shared=False)
     shared_names = _stage_group_names(cfg, stage, shared=True)
@@ -422,7 +421,8 @@ def _run_stage(cfg, policy, stage: Stage, sp, x, positions, scales, sinks,
             ci = None if cache_st is None else cache_st.get(bkey)
             x, co = _apply_block(cfg, blk, f"{stage.name}/{bkey}", bp, x,
                                  positions, tape, dist, memory, mode, ci,
-                                 max_cache_len=max_cache_len)
+                                 max_cache_len=max_cache_len,
+                                 kv_codec=kv_codec)
             if co is not None:
                 cache_out[bkey] = co
         return x, (tape.stats, cache_out)
@@ -523,9 +523,14 @@ def prefill(cfg: ModelConfig, policy, params, batch, scales, sinks,
 
 
 def decode_step(cfg: ModelConfig, policy, params, cache, tokens_or_embeds,
-                pos, scales, sinks, dist: DistCtx = DistCtx()):
+                pos, scales, sinks, dist: DistCtx = DistCtx(),
+                kv_codec=None):
     """One decoding step. ``tokens_or_embeds``: [B] ids or [B,1,D] embeds;
-    ``pos``: current position (scalar int). Returns (logits [B,V], cache')."""
+    ``pos``: current position — a scalar int (lockstep decode) or a
+    per-sequence ``[B]`` vector (continuous batching: every slot decodes
+    at its own position). ``kv_codec``: optional KV-cache storage codec
+    (see :class:`repro.models.layers.RawKVCodec`); the default is the
+    float ring buffer. Returns (logits [B,V], stats, cache')."""
     tape = QTape(policy, scales, sinks)
     stats: Dict[str, Array] = {}
     if cfg.input_mode == "tokens":
@@ -536,7 +541,9 @@ def decode_step(cfg: ModelConfig, policy, params, cache, tokens_or_embeds,
         x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
     x = x.astype(jnp.dtype(policy.compute_dtype))
     B = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (jnp.broadcast_to(pos, (B, 1)) if pos.ndim == 0
+                 else pos.reshape(B, 1))
 
     memory = cache.get("enc_memory") if cfg.encoder_layers else None
     new_cache = dict(cache)
@@ -546,7 +553,8 @@ def decode_step(cfg: ModelConfig, policy, params, cache, tokens_or_embeds,
         x, st, cache_out = _run_stage(cfg, policy, stage,
                                       params["stages"][stage.name], x,
                                       positions, scales, sinks, dist, memory,
-                                      "decode", cache=cache[stage.name])
+                                      "decode", cache=cache[stage.name],
+                                      kv_codec=kv_codec)
         stats.update(st)
         new_cache[stage.name] = cache_out
 

@@ -1,0 +1,11 @@
+"""repro.serve — continuous batching over a DFXP-packed KV-cache pool."""
+from .engine import Request, ServeEngine  # noqa: F401
+from .kv_pool import (  # noqa: F401
+    CacheQuantConfig,
+    PackedKVCodec,
+    insert,
+    make_pool,
+    overflow_summary,
+)
+from .metrics import RequestTrace, ServeMetrics  # noqa: F401
+from .sampler import SamplerConfig, request_key, sample  # noqa: F401

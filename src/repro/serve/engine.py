@@ -1,0 +1,282 @@
+"""Continuous-batching decode engine over a fixed slot array.
+
+Replaces the lockstep loop (prefill a batch, decode everyone for exactly
+``max_new`` steps) with a real request lifecycle:
+
+  queued → admitted into a free slot (prefill) → decoding at its own
+  position → finished (EOS or its own ``max_new``) → slot freed →
+  next queued request admitted **mid-decode**.
+
+Every device computation is fixed-shape and jitted once per shape:
+
+* ``_decode`` runs over all ``max_slots`` rows each step — per-slot
+  position vector (``transformer.decode_step`` with ``pos: [B]``),
+  per-slot PRNG streams, one compile for the engine's lifetime.  Free
+  slots decode garbage into their own cache rows; row independence means
+  active slots are unaffected, and admission overwrites the row anyway.
+* ``_prefill`` compiles per ``(group_size, prompt_len)``: admission
+  groups queued requests of equal prompt length into one batch, so a
+  burst of same-length requests costs one prefill — and an engine admitting
+  B equal-length prompts into B free slots reproduces the lockstep
+  engine's prefill bit-for-bit (the equivalence test's anchor).
+  Variable-length prompts prefill as separate length groups, never
+  padded — padding would perturb MoE capacity routing and SSM state.
+  MoE models admit one request per prefill for the same reason: expert
+  capacity is computed over the whole prefill batch, and the engine
+  guarantees a request's tokens don't depend on who it shares with.
+* ``_insert`` scatters the fresh cache entry into pool rows (axis 1) and,
+  in packed mode, quantizes it first (``kv_pool.PackedKVCodec``).
+
+The KV pool stores K/V float32 (bit-identical to ``transformer.init_cache``)
+or as DFXP-packed int8/int16 mantissas with controller-managed per-slot
+exponents (``cache_bits=8|16``) — halving/quartering cache HBM and hence
+multiplying concurrent slot capacity.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ScaleState
+from repro.core.policy import PrecisionPolicy
+from repro.models import transformer as T
+
+from . import kv_pool, metrics, sampler
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``tokens``: 1-D prompt ids."""
+
+    uid: int
+    tokens: np.ndarray
+    max_new: int = 16
+    eos_id: Optional[int] = None
+
+
+class ServeEngine:
+    """Continuous-batching engine over ``max_slots`` concurrent sequences.
+
+    Parameters
+    ----------
+    cfg, policy, params: the functional model triple.
+    max_slots: concurrent sequences (the decode batch shape).
+    max_len: per-slot KV capacity; every request needs
+        ``prompt_len + max_new <= max_len``.
+    cache_bits: 0 → float32 KV pool (bit-identical to the lockstep
+        engine); 8/16 → DFXP-packed mantissa pool.
+    sampler_cfg: greedy / temperature / top-k, per-request PRNG streams.
+    cache_cfg: overrides the packed pool's controller settings.
+    """
+
+    def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
+                 *, max_slots: int, max_len: int, cache_bits: int = 0,
+                 sampler_cfg: sampler.SamplerConfig = sampler.SamplerConfig(),
+                 cache_cfg: Optional[kv_pool.CacheQuantConfig] = None,
+                 seed: int = 0, init_exp: float = -6.0):
+        if cfg.input_mode != "tokens" or cfg.encoder_layers:
+            raise ValueError("ServeEngine serves token-in decoder models")
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.cfg, self.policy, self.params = cfg, policy, params
+        self.max_slots, self.max_len = max_slots, max_len
+        self.sampler_cfg = sampler_cfg
+        self.seed = seed
+        gs = T.group_shapes(cfg)
+        self.exps = ScaleState.create(gs, init_exp).exps
+        self.sinks = {n: jnp.zeros(s + (3,), jnp.float32)
+                      for n, s in gs.items() if n.startswith("g:")}
+
+        if cache_bits:
+            self.cache_cfg = cache_cfg or kv_pool.CacheQuantConfig(
+                width=cache_bits)
+            if self.cache_cfg.width != cache_bits:
+                raise ValueError("cache_bits and cache_cfg.width disagree")
+            self.codec: Optional[kv_pool.PackedKVCodec] = \
+                kv_pool.PackedKVCodec(self.cache_cfg)
+        else:
+            self.cache_cfg, self.codec = None, None
+        self._pool = kv_pool.make_pool(cfg, max_slots, max_len, self.codec)
+
+        # per-slot host state
+        B = max_slots
+        self._tok = np.zeros(B, np.int32)
+        self._pos = np.zeros(B, np.int32)
+        self._active = np.zeros(B, bool)
+        self._reqs: List[Optional[Request]] = [None] * B
+        self._gen: List[List[int]] = [[] for _ in range(B)]
+        self._keys = np.zeros((B, 2), np.uint32)
+        self._queue: collections.deque = collections.deque()
+        self._results: Dict[int, np.ndarray] = {}
+        self._next_uid = 0
+        self._ovf = np.zeros(3, np.float64)   # harvested at request finish
+        self.metrics = metrics.ServeMetrics()
+
+        # the pool argument is donated: decode/insert rewrite it in place
+        # instead of holding two full copies live (the packed pool exists
+        # to shrink cache HBM — doubling it back would defeat the point)
+        self._prefill = jax.jit(self._prefill_impl)   # per (g, L) shape
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+        self._slot_tot = jax.jit(kv_pool.slot_totals)
+        # MoE prefill routes with a capacity computed over the whole batch,
+        # so batching prompts would couple their routing — admit one at a
+        # time to keep the solo == shared token guarantee exact
+        self._admit_group_cap = 1 if cfg.num_experts else max_slots
+
+    # -- jitted device steps ----------------------------------------------
+    def _prefill_impl(self, tokens, keys):
+        logits, _, cache = T.prefill(self.cfg, self.policy, self.params,
+                                     {"tokens": tokens}, self.exps,
+                                     self.sinks, max_cache_len=self.max_len)
+        # first generated token sits at absolute position L = prompt length
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        first = sampler.sample(logits, sampler.position_keys(keys, pos),
+                               self.sampler_cfg)
+        return first, cache
+
+    def _insert_impl(self, pool, entry, slots, keys):
+        return kv_pool.insert(pool, entry, slots, self.codec, keys)
+
+    def _decode_impl(self, pool, tok, pos, keys):
+        logits, _, pool = T.decode_step(self.cfg, self.policy, self.params,
+                                        pool, tok, pos, self.exps,
+                                        self.sinks, kv_codec=self.codec)
+        nxt = sampler.sample(logits, sampler.position_keys(keys, pos + 1),
+                             self.sampler_cfg)
+        return nxt, pool
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, prompt, max_new: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        """Queue one request; returns its uid."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new {max_new} exceeds "
+                f"max_len {self.max_len}")
+        if self.cfg.family in ("ssm", "hybrid") and \
+                prompt.size % self.cfg.ssm_chunk:
+            raise ValueError(     # ssm_forward's prefill contract
+                f"prompt_len {prompt.size} must be a multiple of "
+                f"ssm_chunk {self.cfg.ssm_chunk} for {self.cfg.family}")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, max_new, eos_id))
+        self.metrics.on_submit(uid, prompt.size)
+        return uid
+
+    def _finish(self, slot: int) -> None:
+        req = self._reqs[slot]
+        self._results[req.uid] = np.asarray(self._gen[slot], np.int32)
+        self.metrics.on_finish(req.uid)
+        if self.codec is not None:
+            self._ovf += np.asarray(self._slot_tot(self._pool, slot),
+                                    np.float64)
+        self._active[slot] = False
+        self._reqs[slot] = None
+
+    def _maybe_finish(self, slot: int, tok: int) -> bool:
+        """Finish the slot if its budget is spent or ``tok`` is its EOS."""
+        req = self._reqs[slot]
+        if len(self._gen[slot]) >= req.max_new or \
+                (req.eos_id is not None and tok == req.eos_id):
+            self._finish(slot)
+            return True
+        return False
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue, grouping equal prompt lengths."""
+        free = list(np.where(~self._active)[0])
+        while self._queue and free:
+            plen = self._queue[0].tokens.size
+            cap = min(len(free), self._admit_group_cap)
+            group: List[Request] = []
+            while (self._queue and len(group) < cap
+                   and self._queue[0].tokens.size == plen):
+                group.append(self._queue.popleft())
+            slots = [int(free.pop(0)) for _ in group]
+            tokens = jnp.asarray(np.stack([r.tokens for r in group]))
+            keys = jnp.stack([sampler.request_key(self.seed, r.uid)
+                              for r in group])
+            first, entry = self._prefill(tokens, keys)
+            self._pool = self._insert(self._pool, entry,
+                                      jnp.asarray(slots, jnp.int32), keys)
+            first = np.asarray(first)
+            for r, s, tok in zip(group, slots, first):
+                self.metrics.on_admit(r.uid)
+                self.metrics.on_token(r.uid)
+                self._reqs[s], self._gen[s] = r, [int(tok)]
+                self._tok[s], self._pos[s] = tok, plen
+                self._keys[s] = np.asarray(
+                    sampler.request_key(self.seed, r.uid))
+                self._active[s] = True
+                if self._maybe_finish(s, int(tok)):
+                    free.append(s)
+
+    def step(self) -> None:
+        """Admit what fits, then decode one token on every active slot."""
+        self._admit()
+        if not self._active.any():
+            return
+        nxt, self._pool = self._decode(self._pool, jnp.asarray(self._tok),
+                                       jnp.asarray(self._pos),
+                                       jnp.asarray(self._keys))
+        nxt = np.asarray(nxt)
+        self.metrics.on_decode_step()
+        for s in np.where(self._active)[0]:
+            tok = int(nxt[s])
+            self._gen[s].append(tok)
+            self._pos[s] += 1
+            self._tok[s] = tok
+            self.metrics.on_token(self._reqs[s].uid)
+            self._maybe_finish(s, tok)
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drive until the queue drains; returns ``{uid: generated ids}``."""
+        budget = max_steps if max_steps is not None else (
+            sum(t.max_new for t in list(self._queue))
+            + sum(r.max_new for r in self._reqs if r is not None)
+            + len(self._queue) + self.max_slots + 4)
+        steps = 0
+        while self._queue or self._active.any():
+            if steps >= budget:
+                raise RuntimeError(f"engine did not drain in {budget} steps")
+            self.step()
+            steps += 1
+        return dict(self._results)
+
+    # -- introspection -----------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Start a fresh measurement window (latency/throughput/overflow).
+
+        Aggregates otherwise span the engine's whole lifetime — on an
+        engine reused across waves, ``wall_s`` includes host idle time
+        between ``run()`` calls, so reset before a wave you want to
+        measure in isolation.
+        """
+        self.metrics = metrics.ServeMetrics()
+        self._ovf = np.zeros(3, np.float64)
+
+    def cache_stats(self) -> dict:
+        """Append overflow rate over finished requests + in-flight slots."""
+        live = kv_pool.overflow_summary(self._pool, self._active)
+        ovf = self._ovf[0] + live["cache_overflow_rate"] * \
+            live["cache_appends_quantized"]
+        tot = self._ovf[2] + live["cache_appends_quantized"]
+        return {"cache_overflow_rate": float(ovf / tot) if tot else 0.0,
+                "cache_appends_quantized": float(tot)}
+
+    def stats(self) -> dict:
+        return self.metrics.summary(extra=self.cache_stats())

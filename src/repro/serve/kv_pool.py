@@ -1,0 +1,279 @@
+"""Slot-pooled KV cache with DFXP-packed storage (paper §5/§6, serve-side).
+
+The decode KV cache is the one large runtime tensor the paper's thesis had
+not touched: training holds every tensor group in dynamic fixed point with
+the §5 overflow-rate controller, and Gupta et al. (2015) show narrow
+storage survives long accumulation chains under careful rounding.  The
+:class:`PackedKVCodec` applies exactly that recipe to serving: K/V live as
+int8/int16 **mantissas** plus a per-layer/per-slot log2-step, quantized on
+append and dequantized in the tile of ``attention_decode``.  At 8 bits the
+cache is a quarter of float32 — which multiplies how many concurrent
+sequences fit in HBM, the whole point of a continuous-batching pool.
+
+Scale management reuses the core controller verbatim:
+
+* on **admit** (a freed slot is filled from a fresh prefill), exponents are
+  calibrated from the prompt K/V max-magnitude (``core.scale.calibrate_exp``
+  with a margin bit), accumulators reset;
+* on **append**, per-slot overflow statistics accumulate, and every
+  ``update_interval`` appends ``core.scale.controller_step`` applies the
+  paper's ×2/÷2 rule per slot; stored mantissas are rescaled in place when
+  an exponent moves.
+
+The codec implements the :class:`repro.models.layers.RawKVCodec` protocol,
+so the model layer is storage-agnostic; a pool built with ``codec=None``
+is bit-identical to today's float32 ring buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import container_dtype, pack, pack_rows, qrange
+from repro.core.quant import exact_pow2
+from repro.core.scale import ScaleState, calibrate_exp, controller_step
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheQuantConfig:
+    """How the packed KV pool stores and re-scales its mantissas."""
+
+    width: int = 8                   # mantissa bits: 8 → int8, 16 → int16
+    update_interval: int = 16        # appends between controller applications
+    max_overflow_rate: float = 1e-4  # paper §5 threshold
+    margin_bits: int = 1             # calibration headroom on admit
+    stochastic: bool = False         # stochastic-rounded appends (Gupta 2015)
+
+    def __post_init__(self):
+        if not 2 <= self.width <= 16:
+            raise ValueError(f"cache width {self.width} outside [2, 16]")
+
+
+def is_attn_entry(entry: dict) -> bool:
+    """True for decode-attention cache entries (raw or packed)."""
+    return ("k" in entry or "k_m" in entry) and "pos" in entry
+
+
+def _rescale(m: Array, de: Array, width: int) -> Array:
+    """Re-grid a mantissa buffer after its exponent moved by ``de`` [B].
+
+    ``value = m * 2**e`` is preserved up to one LSB: ``m' = round(m *
+    2**-de)``. ``de == 0`` rows are exact (integer × 1.0).
+    """
+    qmax, qmin = qrange(width)
+    f = exact_pow2(-de).reshape(de.shape + (1,) * (m.ndim - de.ndim))
+    mf = jnp.round(m.astype(jnp.float32) * f)
+    return jnp.clip(mf, qmin, qmax).astype(m.dtype)
+
+
+class PackedKVCodec:
+    """KV-cache codec storing int mantissas + per-layer/per-slot exponents.
+
+    Entry layout (leading layer dim ``n`` stripped inside the layer scan)::
+
+        k_m, v_m : int8/int16 [n, B, W, K, hd]   mantissas
+        k_e, v_e : f32 [n, B]                    log2-steps (integer-valued)
+        pos      : int32 [n, B, W]               ring positions (-1 = empty)
+        acc_k/v  : f32 [n, B, 3]                 controller window stats
+        tot_k/v  : f32 [n, B, 3]                 cumulative stats (metrics)
+        n_app    : f32 [n, B]                    appends since admit
+        key      : uint32 [n, B, 2]              (stochastic mode only)
+    """
+
+    def __init__(self, config: CacheQuantConfig):
+        self.cfg = config
+
+    # -- model-layer protocol (called per layer inside lax.scan) ----------
+    def load(self, entry: dict):
+        k = entry["k_m"].astype(jnp.float32) * \
+            exact_pow2(entry["k_e"])[:, None, None, None]
+        v = entry["v_m"].astype(jnp.float32) * \
+            exact_pow2(entry["v_e"])[:, None, None, None]
+        return k, v, entry["pos"]
+
+    def append(self, entry: dict, k_new: Array, v_new: Array,
+               pos: Array) -> dict:
+        cfg = self.cfg
+        W = entry["k_m"].shape[1]
+        slot = (pos % W).astype(jnp.int32)
+        bidx = jnp.arange(pos.shape[0])
+
+        out = dict(entry)
+        key_k = key_v = None
+        if cfg.stochastic:
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(entry["key"])
+            key_k, key_v, out["key"] = ks[:, 0], ks[:, 1], ks[:, 2]
+
+        k_m, st_k = pack_rows(k_new, cfg.width, entry["k_e"],
+                              stochastic_keys=key_k)
+        v_m, st_v = pack_rows(v_new, cfg.width, entry["v_e"],
+                              stochastic_keys=key_v)
+        k_buf = entry["k_m"].at[bidx, slot].set(k_m)
+        v_buf = entry["v_m"].at[bidx, slot].set(v_m)
+        out["pos"] = entry["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        acc_k = entry["acc_k"] + st_k
+        acc_v = entry["acc_v"] + st_v
+        out["tot_k"] = entry["tot_k"] + st_k
+        out["tot_v"] = entry["tot_v"] + st_v
+        out["n_app"] = entry["n_app"] + 1.0
+
+        # §5 controller, per slot, every update_interval appends.
+        apply = jnp.mod(out["n_app"], float(cfg.update_interval)) == 0.0
+        st = controller_step(
+            ScaleState(exps={"k": entry["k_e"], "v": entry["v_e"]},
+                       acc={"k": acc_k, "v": acc_v}),
+            max_overflow_rate=cfg.max_overflow_rate, apply=apply)
+        out["k_e"], out["v_e"] = st.exps["k"], st.exps["v"]
+        out["acc_k"], out["acc_v"] = st.acc["k"], st.acc["v"]
+        de_k = out["k_e"] - entry["k_e"]
+        de_v = out["v_e"] - entry["v_e"]
+        # exponents move at most every update_interval appends: skip the
+        # full-buffer re-grid (an extra cache read-modify-write per token)
+        # on the steps where nothing changed
+        out["k_m"], out["v_m"] = jax.lax.cond(
+            jnp.any(de_k != 0.0) | jnp.any(de_v != 0.0),
+            lambda a: (_rescale(a[0], de_k, cfg.width),
+                       _rescale(a[1], de_v, cfg.width)),
+            lambda a: a, (k_buf, v_buf))
+        return out
+
+    # -- pool management (full [n, B, ...] shapes, outside the scan) ------
+    def init_like(self, raw: dict) -> dict:
+        """Packed zero-entry matching a raw ``{"k","v","pos"}`` entry."""
+        n, B, W = raw["pos"].shape
+        idtype = container_dtype(self.cfg.width)
+        entry = {
+            "k_m": jnp.zeros(raw["k"].shape, idtype),
+            "v_m": jnp.zeros(raw["v"].shape, idtype),
+            "k_e": jnp.zeros((n, B), jnp.float32),
+            "v_e": jnp.zeros((n, B), jnp.float32),
+            "pos": jnp.full((n, B, W), -1, jnp.int32),
+            "acc_k": jnp.zeros((n, B, 3), jnp.float32),
+            "acc_v": jnp.zeros((n, B, 3), jnp.float32),
+            "tot_k": jnp.zeros((n, B, 3), jnp.float32),
+            "tot_v": jnp.zeros((n, B, 3), jnp.float32),
+            "n_app": jnp.zeros((n, B), jnp.float32),
+        }
+        if self.cfg.stochastic:
+            entry["key"] = jnp.zeros((n, B, 2), jnp.uint32)
+        return entry
+
+    def pack_entry(self, raw: dict, slot_keys: Optional[Array] = None) -> dict:
+        """Quantize a fresh prefill entry ``[n, g, ...]`` for pool insertion.
+
+        Exponents are calibrated per layer/slot from the prompt K/V
+        max-magnitude (empty ring slots, ``pos < 0``, are excluded);
+        accumulators start at zero. ``slot_keys`` [g, 2] seeds the
+        per-slot PRNG chains in stochastic mode.
+        """
+        cfg = self.cfg
+        n, g, W = raw["pos"].shape
+        valid = (raw["pos"] >= 0)[..., None, None]
+
+        def _cal(x):
+            ax = jnp.max(jnp.abs(x.astype(jnp.float32)) * valid,
+                         axis=(2, 3, 4))
+            return calibrate_exp(ax, cfg.width, cfg.margin_bits)
+
+        k_e, v_e = _cal(raw["k"]), _cal(raw["v"])
+        exp = (..., None, None, None)
+        entry = {
+            "k_m": pack(raw["k"], cfg.width, k_e[exp]).mantissa,
+            "v_m": pack(raw["v"], cfg.width, v_e[exp]).mantissa,
+            "k_e": k_e,
+            "v_e": v_e,
+            "pos": raw["pos"],
+            "acc_k": jnp.zeros((n, g, 3), jnp.float32),
+            "acc_v": jnp.zeros((n, g, 3), jnp.float32),
+            "tot_k": jnp.zeros((n, g, 3), jnp.float32),
+            "tot_v": jnp.zeros((n, g, 3), jnp.float32),
+            "n_app": jnp.zeros((n, g), jnp.float32),
+        }
+        if cfg.stochastic:
+            if slot_keys is None:
+                raise ValueError("stochastic cache needs per-slot keys")
+            # domain-tag the cache chain: the same per-request root also
+            # seeds the sampler stream (folded by absolute position), and
+            # positions never reach 2**31 - 1
+            roots = jax.vmap(jax.random.fold_in, (0, None))(
+                slot_keys, 2 ** 31 - 1)
+            entry["key"] = jax.vmap(
+                lambda i: jax.vmap(jax.random.fold_in, (0, None))(
+                    roots, i))(jnp.arange(n))
+        return entry
+
+
+def make_pool(cfg: T.ModelConfig, max_slots: int, max_len: int,
+              codec: Optional[PackedKVCodec] = None) -> dict:
+    """Zero slot pool: ``init_cache`` with attn entries optionally packed."""
+    raw = T.init_cache(cfg, max_slots, max_len)
+    if codec is None:
+        return raw
+    return {sname: {bkey: codec.init_like(e) if is_attn_entry(e) else e
+                    for bkey, e in sc.items()}
+            for sname, sc in raw.items()}
+
+
+def insert(pool: dict, raw_entry: dict, slots: Array,
+           codec: Optional[PackedKVCodec] = None,
+           slot_keys: Optional[Array] = None) -> dict:
+    """Write a fresh prefill cache (group size g) into pool rows ``slots``.
+
+    ``raw_entry`` is what ``transformer.prefill`` returns (float K/V ring
+    buffers); in packed mode each attn entry is quantized via
+    ``codec.pack_entry`` first. Jit-safe (``slots`` may be traced).
+    """
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, pe in sc.items():
+            src = raw_entry[sname][bkey]
+            if codec is not None and "k_m" in pe:
+                src = codec.pack_entry(src, slot_keys)
+            new_sc[bkey] = jax.tree_util.tree_map(
+                lambda dst, s: dst.at[:, slots].set(s), pe, src)
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def overflow_summary(pool: dict, active=None) -> dict:
+    """Cumulative append overflow rates of the packed pool (metrics hook).
+
+    ``active``: optional bool [B] mask restricting the summary to occupied
+    slots (freed slots keep decoding garbage into their own rows).
+    Returns zeros for float32 pools.
+    """
+    ovf = tot = 0.0
+    for sc in pool.values():
+        for e in sc.values():
+            if "k_m" not in e:
+                continue
+            for t in (e["tot_k"], e["tot_v"]):
+                t = t if active is None else t * jnp.asarray(
+                    active, jnp.float32)[None, :, None]
+                ovf = ovf + float(jnp.sum(t[..., 0]))
+                tot = tot + float(jnp.sum(t[..., 2]))
+    return {"cache_overflow_rate": ovf / tot if tot else 0.0,
+            "cache_appends_quantized": tot}
+
+
+def slot_totals(pool: dict, slot) -> Array:
+    """One slot's cumulative ``(ovf, ovf_half, total)`` over all layers.
+
+    Admission (``pack_entry``) zeroes the slot's counters, so between admit
+    and finish this is exactly the occupying request's append statistics —
+    the engine harvests it when the request completes.
+    """
+    out = jnp.zeros((3,), jnp.float32)
+    for sc in pool.values():
+        for e in sc.values():
+            if "k_m" in e:
+                out = out + jnp.sum(e["tot_k"][:, slot], axis=0)
+                out = out + jnp.sum(e["tot_v"][:, slot], axis=0)
+    return out

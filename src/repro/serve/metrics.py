@@ -1,0 +1,92 @@
+"""Serving metrics: per-request latency traces + engine aggregates.
+
+Host-side and allocation-free on the hot path: the engine calls the
+``on_*`` hooks with ``time.perf_counter`` stamps; ``summary()`` reduces to
+the numbers a serving dashboard wants — TTFT, queue wait, aggregate
+decode throughput — plus the packed pool's cumulative cache overflow rate
+(see ``kv_pool.overflow_summary``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+
+def _now() -> float:
+    return time.perf_counter()
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    uid: int
+    prompt_len: int
+    t_submit: float
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    new_tokens: int = 0
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        return None if self.t_admit is None else self.t_admit - self.t_submit
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+
+class ServeMetrics:
+    """Collects request traces; ``summary()`` aggregates them."""
+
+    def __init__(self):
+        self.traces: Dict[int, RequestTrace] = {}
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+        self.decode_steps: int = 0
+
+    # -- engine hooks -----------------------------------------------------
+    def on_submit(self, uid: int, prompt_len: int) -> None:
+        self.traces[uid] = RequestTrace(uid, prompt_len, _now())
+
+    def on_admit(self, uid: int) -> None:
+        self.traces[uid].t_admit = _now()
+        if self.t_start is None:
+            self.t_start = self.traces[uid].t_admit
+
+    def on_token(self, uid: int) -> None:
+        tr = self.traces[uid]
+        tr.new_tokens += 1
+        if tr.t_first is None:
+            tr.t_first = _now()
+
+    def on_finish(self, uid: int) -> None:
+        self.traces[uid].t_finish = self.t_end = _now()
+
+    def on_decode_step(self) -> None:
+        self.decode_steps += 1
+
+    # -- aggregates -------------------------------------------------------
+    def summary(self, extra: Optional[dict] = None) -> dict:
+        done = [t for t in self.traces.values() if t.t_finish is not None]
+        new_tokens = sum(t.new_tokens for t in self.traces.values())
+        wall = ((self.t_end or _now()) - self.t_start
+                if self.t_start is not None else 0.0)
+        ttfts = [t.ttft for t in self.traces.values() if t.ttft is not None]
+        waits = [t.queue_wait for t in self.traces.values()
+                 if t.queue_wait is not None]
+        out = {
+            "requests_submitted": len(self.traces),
+            "requests_finished": len(done),
+            "new_tokens": new_tokens,
+            "decode_steps": self.decode_steps,
+            "wall_s": wall,
+            "tok_per_s": new_tokens / wall if wall > 0 else 0.0,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_max_s": max(ttfts) if ttfts else 0.0,
+            "queue_wait_mean_s": sum(waits) / len(waits) if waits else 0.0,
+            "queue_wait_max_s": max(waits) if waits else 0.0,
+        }
+        if extra:
+            out.update(extra)
+        return out

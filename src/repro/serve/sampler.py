@@ -1,0 +1,53 @@
+"""Token samplers with per-request PRNG streams.
+
+Each request owns an independent key chain derived from ``(engine seed,
+request uid)``; the key for a sampled token is ``fold_in(request_key,
+absolute_position)``.  A request therefore draws the *same* random stream
+whether it runs alone, lockstep-batched, or admitted mid-decode into a
+freed slot — the property the continuous-batching equivalence tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"       # greedy | temperature | top_k
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sampler {self.kind!r} (of {KINDS})")
+        if self.kind == "top_k" and self.top_k <= 0:
+            raise ValueError("top_k sampler needs top_k > 0")
+
+
+def request_key(seed: int, uid: int) -> Array:
+    """The root of one request's PRNG stream."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+
+
+def position_keys(req_keys: Array, pos: Array) -> Array:
+    """Per-request keys for the token generated at ``pos`` [B]."""
+    return jax.vmap(jax.random.fold_in)(req_keys, pos)
+
+
+def sample(logits: Array, keys: Array, cfg: SamplerConfig) -> Array:
+    """Draw one token per row. ``logits``: [B, V]; ``keys``: [B, 2]."""
+    if cfg.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
+    if cfg.kind == "top_k":
+        kth = jax.lax.top_k(scaled, cfg.top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    toks = jax.vmap(jax.random.categorical)(keys, scaled)
+    return toks.astype(jnp.int32)

@@ -1,0 +1,99 @@
+"""core/packed.py: pack/unpack round-trips, clamping, stochastic rounding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed import (
+    PackedArray,
+    container_dtype,
+    pack,
+    pack_overflow_stats,
+    unpack,
+)
+from repro.core.quant import fixed_round
+
+
+@pytest.mark.parametrize("width", [8, 12, 16])
+def test_pack_unpack_roundtrip_on_grid(width):
+    """Grid points ``m * 2**e`` with |m| <= qmax survive exactly."""
+    e = -3.0
+    qmax = 2 ** (width - 1) - 1
+    rng = np.random.RandomState(width)
+    m = rng.randint(-qmax, qmax + 1, size=(64,))
+    x = jnp.asarray(m * 2.0 ** e, jnp.float32)
+    p = pack(x, width, e)
+    assert p.mantissa.dtype == container_dtype(width)
+    np.testing.assert_array_equal(np.asarray(p.mantissa), m)
+    np.testing.assert_array_equal(np.asarray(unpack(p)), np.asarray(x))
+
+
+@pytest.mark.parametrize("width", [8, 12, 16])
+def test_pack_rounding_error_bounded(width):
+    """Off-grid values round to the nearest grid point (<= step/2)."""
+    e = -5.0
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.5
+    err = np.abs(np.asarray(unpack(pack(x, width, e)) - x))
+    assert np.all(err <= 2.0 ** e / 2 + 1e-7)
+
+
+@pytest.mark.parametrize("width", [8, 12, 16])
+def test_pack_clamps_at_qmin_qmax(width):
+    e = 0.0
+    qmax = float(2 ** (width - 1) - 1)
+    qmin = -float(2 ** (width - 1))
+    x = jnp.asarray([1e9, -1e9, qmax + 10.0, qmin - 10.0], jnp.float32)
+    p = pack(x, width, e)
+    np.testing.assert_array_equal(np.asarray(p.mantissa, np.float64),
+                                  [qmax, qmin, qmax, qmin])
+    np.testing.assert_array_equal(np.asarray(unpack(p)),
+                                  [qmax, qmin, qmax, qmin])
+
+
+def test_unpack_dtype_cast():
+    p = pack(jnp.asarray([0.5, -0.25]), 8, -4.0)
+    assert unpack(p, jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_stochastic_pack_is_mean_preserving():
+    """E[floor(m + u)] = m: averaging over many keys recovers the value
+    to far better than the deterministic step/2 bound (Gupta et al. 2015)."""
+    width, e = 8, -4.0
+    x = jnp.asarray([0.3, -0.77, 1.01, 0.0, 3.0 * 2.0 ** e], jnp.float32)
+    n_keys = 1500
+    acc = np.zeros(x.shape, np.float64)
+    for i, k in enumerate(jax.random.split(jax.random.PRNGKey(42), n_keys)):
+        acc += np.asarray(unpack(pack(x, width, e, stochastic_key=k)))
+    mean = acc / n_keys
+    # mean converges to x; 3-sigma of a step-wide Bernoulli over n_keys
+    tol = 3 * 2.0 ** e / 2 / np.sqrt(n_keys)
+    assert np.all(np.abs(mean - np.asarray(x)) <= tol)
+    # exact grid points have zero variance: every draw is exact
+    np.testing.assert_allclose(mean[4], 3.0 * 2.0 ** e, rtol=0, atol=1e-9)
+
+
+def test_stochastic_pack_still_clamps():
+    p = pack(jnp.asarray([1e9, -1e9]), 8, 0.0,
+             stochastic_key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(p.mantissa, np.float64),
+                                  [127.0, -128.0])
+
+
+def test_pack_overflow_stats_matches_fixed_round():
+    """The packing stats triple agrees with quant.fixed_round's counters."""
+    width, e = 8, -2.0
+    x = jax.random.normal(jax.random.PRNGKey(7), (512,)) * 40.0
+    stats = np.asarray(pack_overflow_stats(x, width, e))
+    _, (ovf, ovfh) = fixed_round(x, width, jnp.float32(e))
+    assert stats[2] == x.size
+    assert stats[0] == pytest.approx(float(ovf))
+    assert stats[1] == pytest.approx(float(ovfh))
+
+
+def test_packed_array_pytree():
+    p = pack(jnp.arange(4, dtype=jnp.float32), 12, -1.0)
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    p2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(p2, PackedArray) and p2.width == 12
+    np.testing.assert_array_equal(np.asarray(unpack(p2)),
+                                  np.asarray(unpack(p)))

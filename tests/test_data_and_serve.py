@@ -41,8 +41,7 @@ def test_images_resume_bit_identical():
 def test_engine_greedy_deterministic():
     cfg = configs.get_smoke("llama3_8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, PrecisionPolicy("float32"), params, max_len=48,
-                 batch=2)
+    eng = Engine(cfg, PrecisionPolicy("float32"), params, max_len=48)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
                                  cfg.vocab_size)
     out1 = eng.generate(prompts, max_new=6)
@@ -56,7 +55,7 @@ def test_engine_matches_teacher_forcing():
     cfg = configs.get_smoke("llama3_8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     pol = PrecisionPolicy("float32")
-    eng = Engine(cfg, pol, params, max_len=64, batch=1)
+    eng = Engine(cfg, pol, params, max_len=64)
     prompts = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0,
                                  cfg.vocab_size)
     out = np.asarray(eng.generate(prompts, max_new=4))
@@ -68,3 +67,14 @@ def test_engine_matches_teacher_forcing():
         nxt = int(jnp.argmax(logits[0, -1]))
         assert nxt == int(out[0, i]), f"step {i}: {nxt} != {out[0, i]}"
         toks = jnp.concatenate([toks, jnp.array([[nxt]])], axis=1)
+
+
+def test_serve_cli_constructs_serve_engine(capsys):
+    """The CLI drives the repro.serve engine end-to-end (mixed lengths)."""
+    from repro.launch.serve import main
+    main(["--arch", "llama3_8b", "--smoke", "--arithmetic", "float32",
+          "--num-requests", "2", "--prompt-len", "4,6", "--max-new", "2",
+          "--slots", "2", "--cache-bits", "8"])
+    out = capsys.readouterr().out
+    assert "served 2 requests" in out
+    assert "tok/s" in out
