@@ -146,6 +146,40 @@ def run(tiny: bool = False):
                                         width_a=WIDTH, width_b=WIDTH),
                       a, ct, reps=reps), mflop))
 
+    # -- decode attention: packed-pool composite vs fused flash-decode ------
+    B, W, K_kv, G, hd = (2, 16, 2, 2, 8) if tiny else (4, 256, 4, 4, 64)
+    kq, kk, kv2 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q4 = jax.random.normal(kq, (B, K_kv, G, hd))
+    km = jax.random.randint(kk, (B, W, K_kv, hd), -127, 128, jnp.int8)
+    vm = jax.random.randint(kv2, (B, W, K_kv, hd), -127, 128, jnp.int8)
+    exps = jnp.full((B,), -7.0, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(W), (B, W)).astype(jnp.int32)
+    qpos = jnp.full((B,), W - 1, jnp.int32)
+    scale = 1.0 / hd ** 0.5
+    mflop = 4 * B * W * K_kv * G * hd / 1e6
+    tag = f"{B}x{W}x{K_kv * G}x{hd}"
+
+    def attn_jnp(q4, km, vm, exps, pos, qpos):
+        # the unfused serve path: codec.load dequant, then masked einsum
+        from repro.core.quant import exact_pow2
+        kf = km.astype(jnp.float32) * exact_pow2(exps)[:, None, None, None]
+        vf = vm.astype(jnp.float32) * exact_pow2(exps)[:, None, None, None]
+        s = jnp.einsum("bkgh,bwkh->bkgw", q4, kf,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (pos >= 0) & (qpos[:, None] - pos >= 0)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgw,bwkh->bkgh", p, vf,
+                          preferred_element_type=jnp.float32)
+
+    out.append((f"kernels/attn_decode_jnp_{tag}",
+                _time(jax.jit(attn_jnp), q4, km, vm, exps, pos, qpos,
+                      reps=reps), mflop))
+    from repro.kernels.attn.ops import flash_decode
+    out.append((f"kernels/attn_decode_fused_{mode}_{tag}",
+                _time(lambda *a: flash_decode(*a, width=8, scale=scale),
+                      q4, km, vm, pos, qpos, exps, exps, reps=reps), mflop))
+
     # -- full train step (fwd + dgrad + wgrad per dot site) -----------------
     steps = 1 if tiny else 3
     out.append(("kernels/train_step_jnp_maxout16",

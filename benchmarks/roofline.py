@@ -18,13 +18,29 @@ MODEL_FLOPS (the "useful" numerator) follows the MFU convention:
 The ratio MODEL_FLOPS / (HLO_FLOPs × chips) then exposes remat recompute,
 quantization-sim overhead, and masked-out attention compute.
 
+The decode-attention KV model (``--kv-report``) prices the serve hot
+loop's biggest HBM consumer per cache width: each decoded token re-reads
+the whole KV window of every attention layer, so bytes/token/layer =
+``2 · S_kv · K · hd · elem_bytes`` — 4 B/elem for a float32 pool, 2/1 for
+int16/int8 mantissas.  The *unfused* packed path (``codec.load``) widens
+first: it additionally writes the f32 K/V copy and reads it back through
+the scores/AV einsums, so an int8 cache costs MORE traffic than f32
+until the dequantize is fused into the attention tile loads
+(``--fused-decode``, ``repro.kernels.attn``).  The report prints those
+expected ratios next to the measured ``BENCH_serve.json`` fused/unfused
+tok/s pairs (CPU rows measure interpret-mode Pallas overhead, not HBM —
+the expected column is the TPU story).
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--results f.jsonl]
+       PYTHONPATH=src python -m benchmarks.roofline --kv-report \
+           [--arch llama3_8b] [--decode-s 32768] [--serve-json BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import json
+import os
 
 PEAK_FLOPS = 197e12     # v5e bf16 / chip
 HBM_BW = 819e9          # B/s per chip
@@ -127,6 +143,69 @@ def analyse(rec: dict) -> dict:
     }
 
 
+def kv_decode_bytes(arch: str, S: int, bits: int, fused: bool) -> float:
+    """HBM bytes per decoded token spent reading the KV cache, all layers.
+
+    ``bits``: 0 = float32 pool, 8/16 = packed mantissas. The unfused
+    packed path models ``PackedKVCodec.load``: mantissa read + f32 K/V
+    materialization (write) + f32 re-read by the attention einsums.
+    Windowed (local) layers only re-read ``min(window, S)`` slots.
+    """
+    cfg, _, _, attn_layers, _ = _arch_info(arch)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    elem = {0: 4, 8: 1, 16: 2}[bits]
+    total = 0.0
+    for w in attn_layers:
+        skv = min(w, S) if w else S
+        per = 2 * skv * K * hd * elem           # K + V storage read
+        if bits and not fused:
+            per += 2 * 2 * skv * K * hd * 4     # f32 copy: write + re-read
+        total += per
+    return total
+
+
+def _serve_ratio(rows: dict, bits: int):
+    """Measured fused/unfused tok/s ratio for one cache width, if present."""
+    suffix = {0: "f32", 8: "int8", 16: "int16"}[bits]
+    base = rows.get(f"serve_batched_{suffix}")
+    fused = rows.get(f"serve_batched_{suffix}_fused")
+    if base and fused:
+        return fused / base
+    return None
+
+
+def kv_report(arch: str, S: int, serve_json: str, markdown: bool) -> None:
+    """Expected vs measured fused-decode win per cache width."""
+    rows = {}
+    if serve_json and os.path.exists(serve_json):
+        d = json.load(open(serve_json))
+        rows = {r["name"]: r["derived"] for r in d.get("rows", [])}
+        backend = d.get("meta", {}).get("backend", "?")
+    else:
+        backend = "none"
+    f32 = kv_decode_bytes(arch, S, 0, False)
+    print(f"# decode-attention KV traffic: arch={arch} S={S} "
+          f"(measured rows: backend={backend})")
+    hdr = ("cache", "path", "kv_bytes/tok", "vs_f32", "hbm_s/tok",
+           "measured_tok_s_ratio")
+    sep = " | " if markdown else ","
+    if markdown:
+        print("| " + sep.join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for bits in (0, 16, 8):
+        for fused in (False, True):
+            b = kv_decode_bytes(arch, S, bits, fused)
+            ratio = _serve_ratio(rows, bits) if fused else None
+            vals = ({0: "f32", 8: "int8", 16: "int16"}[bits],
+                    "fused" if fused else "load+einsum",
+                    f"{b:.3e}", f"{f32 / b:.2f}x", f"{b / HBM_BW:.3e}",
+                    f"{ratio:.2f}x" if ratio else "-")
+            print(("| " + sep.join(vals) + " |") if markdown
+                  else ",".join(vals))
+
+
 NOTES = {
     "compute": "compute-bound: cut remat recompute, eliminate masked-out "
                "attention flops (chunked causal attention), map DFXP "
@@ -152,7 +231,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="dryrun_results.jsonl")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--kv-report", action="store_true",
+                    help="decode-attention KV HBM traffic per cache width "
+                         "(expected vs measured fused-decode win)")
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--decode-s", type=int, default=32768,
+                    help="KV window length for --kv-report")
+    ap.add_argument("--serve-json", default="BENCH_serve.json")
     args = ap.parse_args()
+
+    if args.kv_report:
+        kv_report(args.arch, args.decode_s, args.serve_json, args.markdown)
+        return
 
     rows = sorted(load(args.results),
                   key=lambda r: (r["arch"], r["shape"], r["mesh"]))

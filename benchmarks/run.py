@@ -55,6 +55,10 @@ def main() -> None:
     for name, fn, json_path in suites:
         try:
             rows = list(fn())
+            if not rows:
+                # a suite that silently emits nothing would commit an empty
+                # BENCH_*.json and read as "measured, no regression"
+                raise RuntimeError(f"suite {name!r} emitted no rows")
             for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]:.4f}", flush=True)
         except Exception as e:  # keep the suite running

@@ -1,15 +1,22 @@
-"""Serving benchmarks: sequential vs continuous-batched, f32 vs packed cache.
+"""Serving benchmarks: sequential vs continuous-batched, f32 vs packed,
+fused vs unfused decode attention.
 
 Rows follow the repo convention ``(name, us_per_call, derived)`` where
 ``us_per_call`` is microseconds per generated token and ``derived`` is the
-aggregate tok/s. Two comparisons matter:
+aggregate tok/s. Three comparisons matter:
 
 * ``serve_sequential_f32`` vs ``serve_batched_f32`` — the continuous-
   batching win: N requests through 1 slot vs N slots.
 * ``serve_batched_f32`` vs ``serve_batched_int8``/``int16`` — the packed
   KV-pool tax/win. On CPU the packing math is overhead; on an HBM-bound
-  accelerator the 4×/2× smaller cache is the capacity multiplier (the
-  numbers to watch on a real backend).
+  accelerator the 4×/2× smaller cache is the capacity multiplier.
+* ``serve_batched_*`` vs ``serve_batched_*_fused`` — the flash-decode
+  kernel (``--fused-decode``) vs the ``codec.load`` + einsum composite,
+  per cache width. On CPU the fused rows time interpret-mode Pallas
+  (reference semantics, slower); on a compiled TPU backend the fused
+  int8/int16 rows are where the smaller cache turns into decode
+  *bandwidth* — no per-layer f32 K/V materialization on the hot path
+  (``benchmarks/roofline.py --kv-report`` prints the expected ratios).
 
 ``tiny=True`` is the CI smoke contract: 2 mixed-length requests, int8
 cache, asserting every request finishes with its full budget — execution,
@@ -38,9 +45,9 @@ def _wave(eng, prompts, max_new):
     return sum(len(out[u]) for u in uids), dt
 
 
-def _drive(cfg, params, prompts, max_new, *, slots, cache_bits):
-    eng = ServeEngine(cfg, PrecisionPolicy("float32"), params,
-                      max_slots=slots,
+def _drive(cfg, params, prompts, max_new, *, slots, cache_bits, fused=False):
+    eng = ServeEngine(cfg, PrecisionPolicy("float32", fused_decode=fused),
+                      params, max_slots=slots,
                       max_len=max(len(p) for p in prompts) + max_new,
                       cache_bits=cache_bits)
     _wave(eng, prompts, max_new)            # warmup: pays every compile
@@ -60,12 +67,15 @@ def run(tiny: bool = False):
                for i, plen in enumerate(lens)]
 
     rows = []
-    variants = [("serve_sequential_f32", 1, 0),
-                ("serve_batched_f32", slots, 0),
-                ("serve_batched_int8", slots, 8),
-                ("serve_batched_int16", slots, 16)]
-    for name, n_slots, bits in variants:
+    variants = [("serve_sequential_f32", 1, 0, False),
+                ("serve_batched_f32", slots, 0, False),
+                ("serve_batched_f32_fused", slots, 0, True),
+                ("serve_batched_int8", slots, 8, False),
+                ("serve_batched_int8_fused", slots, 8, True),
+                ("serve_batched_int16", slots, 16, False),
+                ("serve_batched_int16_fused", slots, 16, True)]
+    for name, n_slots, bits, fused in variants:
         toks, dt = _drive(cfg, params, prompts, max_new,
-                          slots=n_slots, cache_bits=bits)
+                          slots=n_slots, cache_bits=bits, fused=fused)
         rows.append((name, dt / toks * 1e6, toks / dt))
     return rows

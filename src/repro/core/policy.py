@@ -59,6 +59,12 @@ class PrecisionPolicy:
     #   repro.kernels.dispatch). Bit-identical to the jnp composite;
     #   off by default because interpret-mode Pallas (any non-TPU
     #   backend) trades speed for kernel-faithful execution.
+    fused_decode: bool = False       # serve-side: run decode attention as
+    #   the fused Pallas flash-decode kernel (repro.kernels.attn) directly
+    #   on the KV pool's storage containers — packed pools dequantize
+    #   int8/int16 mantissas in the tile loads instead of materializing
+    #   f32 K/V per layer (codec.load), which is where the 4×/2× HBM-read
+    #   win of the packed cache actually cashes out. CLI --fused-decode.
 
     def __post_init__(self):
         if self.arithmetic not in (*_FLOATS, "fixed", "dfxp", "observe"):

@@ -1,0 +1,3 @@
+"""Fused Pallas decode-attention over the packed KV pool (flash-decode)."""
+from .ops import flash_decode  # noqa: F401
+from .ref import decode_attention_ref  # noqa: F401

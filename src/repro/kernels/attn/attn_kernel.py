@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: fused flash-decode attention over a packed KV pool.
+
+Single-query (decode) GQA attention computed **directly on the pool's
+storage containers**: tiles of int8/int16 K/V mantissas stream from HBM,
+are dequantized in-register against the per-layer/per-slot power-of-two
+step (``value = mantissa * 2**e``, the
+:class:`repro.serve.kv_pool.PackedKVCodec` layout), and feed an
+online-softmax accumulator — so the f32 K/V never materializes and an
+int8 cache really does read 4× fewer HBM bytes than float32 (the win
+``codec.load`` + einsum throws away by widening first).
+
+Grid layout (compiled path)::
+
+        grid = (B, K, nsplit)            nsplit = W_padded / block_w
+
+        q     [B, K, G, hd]   -> tile [G, hd]        (one kv-head's group)
+        k/v   [B, W, K, hd]   -> tile [block_w, hd]  (int8/int16/f32)
+        pos   [B, W]          -> tile [1, block_w]   (ring positions)
+        out   [B, K, G, hd]   <- written on the last split
+
+The split axis is innermost/sequential: VMEM scratch carries the running
+``(m, l, acc)`` — partial max, softmax denominator, weighted-value
+numerator — across splits (flash combine: ``corr = exp(m_old - m_new)``
+rescales both accumulators), and the final reduction ``acc / l`` happens
+once on the last split.  Masked lanes (empty slots ``pos < 0``, future
+positions, outside the sliding window) contribute an exact 0, and a
+ragged last split is handled **in-kernel** by a slot-index bounds mask
+(lanes ``>= W`` are dropped and their V rows zeroed) — the wrapper never
+pads the K/V buffers, because a ``jnp.pad`` copy of the whole pool per
+layer per token would reintroduce exactly the HBM round-trip this kernel
+exists to eliminate.
+
+Interpret mode (any non-TPU backend) instead runs ONE grid step on
+full-shape blocks and executes :func:`repro.kernels.attn.ref.attend`
+verbatim on the dequantized arrays — identical ops on identical shapes,
+which makes the fused kernel **bit**-identical to the composite on CPU
+(the same contract the qmatmul family keeps, and what the serve tests
+pin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as R
+
+try:  # TPU-specific memory spaces; without them interpret mode falls back
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover — to the scratch-free batched body
+    pltpu = None
+    _VMEM = None
+
+
+def _dequant(tile, step, width):
+    """Tile load: int mantissas × power-of-two step (``width=None`` → raw)."""
+    if width is None:
+        return tile.astype(jnp.float32)
+    return tile.astype(jnp.float32) * step
+
+
+def _split_kernel(qpos_ref, steps_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, width, scale: float, window,
+                  causal: bool, nsplit: int, G: int, hd: int, block_w: int,
+                  W: int):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qf = q_ref[...].reshape(G, hd)
+    kf = _dequant(k_ref[...].reshape(block_w, hd), steps_ref[0, 0], width)
+    vf = _dequant(v_ref[...].reshape(block_w, hd), steps_ref[0, 1], width)
+    pos = pos_ref[...]                          # [1, block_w] int32
+    # ragged tail: lanes past the true window length read out-of-bounds
+    # garbage — mask them by global slot index, and zero their V rows so
+    # the 0-probability × garbage product in the PV dot stays an exact 0
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)
+    inb = r * block_w + lane < W
+    vf = jnp.where(inb.reshape(block_w, 1), vf, 0.0)
+    d = qpos_ref[0, 0] - pos
+    valid = inb & (pos >= 0)
+    if causal:
+        valid = valid & (d >= 0)
+    if window:
+        valid = valid & (d < window)
+
+    s = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, -1e30)              # [G, block_w]
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_ref[...] - m_new)          # exp(-inf - m) == 0 on init
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, vf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(r == nsplit - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.reshape(1, 1, G, hd).astype(o_ref.dtype)
+
+
+def _batched_kernel(qpos_ref, steps_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                    *, width, scale: float, window, causal: bool):
+    """One grid step, full-shape blocks: ref.attend on the loaded arrays."""
+    exp = (slice(None), None, None, None)
+    kf = _dequant(k_ref[...], steps_ref[...][:, 0][exp], width)
+    vf = _dequant(v_ref[...], steps_ref[...][:, 1][exp], width)
+    o_ref[...] = R.attend(q_ref[...], kf, vf, pos_ref[...], qpos_ref[:, 0],
+                          scale=scale, window=window, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "block_w", "scale", "window", "causal", "interpret"))
+def flash_decode_call(q, k, v, pos, qpos, steps, *, width, block_w: int,
+                      scale: float, window, causal: bool, interpret: bool):
+    """Blocked flash-decode over the raw (unpadded) pool buffers.
+
+    ``q``: f32 [B, K, G, hd] · ``k``/``v``: int8/int16/f32 [B, W, K, hd] ·
+    ``pos``: int32 [B, W] · ``qpos``: int32 [B, 1] · ``steps``: f32
+    [B, 2] dequant steps ``[2**k_e, 2**v_e]`` (ignored for
+    ``width=None``).  Returns f32 [B, K, G, hd].  ``W`` need not be a
+    ``block_w`` multiple — the ragged tail is masked in-kernel.
+    ``block_w >= W`` in interpret mode runs the single-step full-shape
+    body (bit-identical to ``ref.attend``).
+    """
+    B, K, G, hd = q.shape
+    W = k.shape[1]
+    out_shape = jax.ShapeDtypeStruct((B, K, G, hd), jnp.float32)
+
+    if interpret and (block_w >= W or _VMEM is None):
+        # no pltpu → the split path's VMEM scratch is unavailable; the
+        # full-shape body is the same math, just unsplit
+        return pl.pallas_call(
+            functools.partial(_batched_kernel, width=width, scale=scale,
+                              window=window, causal=causal),
+            out_shape=out_shape,
+            interpret=True,
+        )(qpos, steps, q, k, v, pos)
+    if _VMEM is None:  # pragma: no cover — compiled TPU implies pltpu
+        raise RuntimeError(
+            "split-K flash-decode needs jax.experimental.pallas.tpu "
+            "memory spaces for its VMEM scratch")
+
+    nsplit = pl.cdiv(W, block_w)
+    return pl.pallas_call(
+        functools.partial(_split_kernel, width=width, scale=scale,
+                          window=window, causal=causal, nsplit=nsplit,
+                          G=G, hd=hd, block_w=block_w, W=W),
+        grid=(B, K, nsplit),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, r: (b, 0)),           # qpos
+            pl.BlockSpec((1, 2), lambda b, h, r: (b, 0)),           # steps
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, r: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_w, 1, hd), lambda b, h, r: (b, r, h, 0)),
+            pl.BlockSpec((1, block_w, 1, hd), lambda b, h, r: (b, r, h, 0)),
+            pl.BlockSpec((1, block_w), lambda b, h, r: (b, r)),     # pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, r: (b, h, 0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=[_VMEM((G, 1), jnp.float32),    # running max
+                        _VMEM((G, 1), jnp.float32),    # denominator
+                        _VMEM((G, hd), jnp.float32)],  # numerator
+        interpret=interpret,
+    )(qpos, steps, q, k, v, pos)

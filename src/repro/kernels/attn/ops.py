@@ -1,0 +1,66 @@
+"""jit'd wrapper for the fused decode-attention kernel: shapes + dispatch.
+
+Owns everything the kernel body stays agnostic of: backend detection
+(compiled Pallas on TPU, interpret elsewhere —
+:func:`repro.kernels._tiling.resolve_interpret`), split-size selection
+through the dispatch layer's shape-bucketed autotune cache
+(:func:`repro.kernels.dispatch.attn_blocks_for`), and the dequant-step
+packing (``2**e`` built with the bit-exact
+:func:`repro.core.quant.exact_pow2`, the same grid the codec's quantizer
+used on append).  The K/V buffers are handed to the kernel **as stored**
+— never padded or copied; a ragged last split is masked in-kernel by
+slot index, because any host-side reshape of the pool would re-spend the
+HBM round-trip the fusion saves.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import exact_pow2
+from repro.kernels import dispatch
+from repro.kernels._tiling import resolve_interpret
+
+from .attn_kernel import flash_decode_call
+
+Array = jax.Array
+
+
+def flash_decode(q: Array, k: Array, v: Array, pos: Array, q_pos: Array,
+                 k_exp=None, v_exp=None, *, width: Optional[int] = None,
+                 scale: float, window: Optional[int] = None,
+                 causal: bool = True, block_w: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> Array:
+    """Fused single-query GQA attention over a (packed) KV ring buffer.
+
+    ``q``: [B, K, G, hd] (kv-head-major query groups, i.e.
+    ``q4.reshape(B, K, G, hd)``) · ``k``/``v``: [B, W, K, hd] int8/int16
+    mantissas (``width=8|16``) or raw floats (``width=None``) · ``pos``:
+    int32 [B, W] ring positions (-1 = empty) · ``q_pos``: int32 [B] query
+    positions · ``k_exp``/``v_exp``: f32 [B] log2-steps of the packed
+    entries.  Returns f32 [B, K, G, hd]; numerics are the
+    :func:`repro.kernels.attn.ref.decode_attention_ref` composite
+    (bit-identical in interpret mode).
+    """
+    B, K, G, hd = q.shape
+    W = k.shape[1]
+    interpret = resolve_interpret(interpret)
+    if block_w is None:
+        block_w = dispatch.attn_blocks_for(W, G, hd, width=width,
+                                           interpret=interpret)
+    block_w = min(block_w, W)
+
+    if width is None:
+        steps = jnp.ones((B, 2), jnp.float32)
+    else:
+        steps = jnp.stack([exact_pow2(jnp.asarray(k_exp, jnp.float32)),
+                           exact_pow2(jnp.asarray(v_exp, jnp.float32))],
+                          axis=-1)
+    qpos = jnp.asarray(q_pos, jnp.int32).reshape(B, 1)
+
+    return flash_decode_call(q.astype(jnp.float32), k, v,
+                             pos.astype(jnp.int32), qpos, steps, width=width,
+                             block_w=block_w, scale=scale, window=window,
+                             causal=causal, interpret=interpret)

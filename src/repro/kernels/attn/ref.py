@@ -1,0 +1,90 @@
+"""Reference composite for the fused decode-attention kernel.
+
+This is the numerics contract of :mod:`repro.kernels.attn`: a single-query
+GQA attention over a (possibly DFXP-packed) KV ring buffer, written as
+plain jnp on the full ``[B, ...]`` shapes.  The Pallas kernel's
+interpret-mode path executes :func:`attend` *verbatim* on its loaded
+tiles (one grid step, full-shape blocks, dequantize first), which is what
+lets CPU tests assert **bit**-equality between the fused kernel and this
+composite — the same guarantee the qmatmul family gives against its
+``ste_quant + jnp.matmul`` composite.
+
+Masking semantics match ``repro.models.layers.attention_decode``:
+
+* ``pos < 0`` marks an empty ring slot (never attended);
+* causal: the query at ``q_pos`` sees keys with ``pos <= q_pos``;
+* ``window``: only keys with ``q_pos - pos < window`` (None = global).
+
+The softmax is the flash form — masked lanes contribute an exact ``0.0``
+(``jnp.where`` before and after the exp), the max is subtracted per
+(batch, kv-head, group) row, and the normalizer divides the *output*
+(``o / l``), which is the order the split-K kernel reproduces.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import exact_pow2
+
+Array = jax.Array
+
+
+def valid_mask(pos: Array, q_pos: Array, *, window: Optional[int],
+               causal: bool) -> Array:
+    """[B, W] bool: which ring slots the query at ``q_pos`` [B] may see."""
+    d = q_pos[:, None] - pos
+    valid = pos >= 0
+    if causal:
+        valid = valid & (d >= 0)
+    if window:
+        valid = valid & (d < window)
+    return valid
+
+
+def attend(qf: Array, kf: Array, vf: Array, pos: Array, q_pos: Array, *,
+           scale: float, window: Optional[int] = None,
+           causal: bool = True) -> Array:
+    """Single-query GQA attention on dequantized (f32) operands.
+
+    ``qf``: [B, K, G, hd] · ``kf``/``vf``: [B, W, K, hd] · ``pos``: [B, W]
+    int32 · ``q_pos``: [B] int32.  Returns [B, K, G, hd] float32.
+    """
+    s = jnp.einsum("bkgh,bwkh->bkgw", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    v4 = valid_mask(pos, q_pos, window=window, causal=causal)[:, None, None, :]
+    s = jnp.where(v4, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(v4, jnp.exp(s - m), 0.0)
+    el = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgw,bwkh->bkgh", p, vf,
+                   preferred_element_type=jnp.float32)
+    return o / jnp.maximum(el, 1e-30)
+
+
+def dequant(m: Array, e: Array) -> Array:
+    """[B, W, K, hd] mantissas × per-row exponents [B] → f32 values."""
+    return m.astype(jnp.float32) * exact_pow2(e)[:, None, None, None]
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, pos: Array,
+                         q_pos: Array, *, k_exp=None, v_exp=None,
+                         width: Optional[int] = None, scale: float,
+                         window: Optional[int] = None,
+                         causal: bool = True) -> Array:
+    """The full composite: dequantize (when ``width``) then :func:`attend`.
+
+    ``width=None`` takes ``k``/``v`` as raw float K/V (the f32-pool path);
+    otherwise they are int8/int16 mantissas with ``k_exp``/``v_exp`` [B]
+    log2-steps, exactly the :class:`repro.serve.kv_pool.PackedKVCodec`
+    entry layout (one layer, leading layer dim stripped).
+    """
+    qf = q.astype(jnp.float32)
+    if width is None:
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    else:
+        kf, vf = dequant(k, k_exp), dequant(v, v_exp)
+    return attend(qf, kf, vf, pos, q_pos, scale=scale, window=window,
+                  causal=causal)

@@ -20,6 +20,17 @@ four concerns the kernels themselves stay agnostic of:
   * **backend detection** — compiled Pallas on TPU, interpret elsewhere,
     resolved once per process (``_tiling.default_interpret``).
 
+The same machinery dispatches the fused decode-attention kernel
+(:mod:`repro.kernels.attn`): :func:`attn_blocks_for` picks the split-K
+size from the same measured cache, keyed ``("attn", Ŵ, G, hd, width)``.
+
+Measured entries **persist across processes**: every successful timing
+is serialized to ``.cache/autotune.json`` (override the path with the
+``REPRO_AUTOTUNE_CACHE`` env var) and loaded back on import, so a
+compiled-TPU autotune run survives restarts instead of re-timing every
+bucket per process.  Heuristic fallbacks are never persisted — only
+numbers an actual backend produced.
+
 ``QTape.dot`` calls :func:`tape_dot` when the policy enables the fused
 path (``PrecisionPolicy.fused_matmul``); numerics are bit-identical to
 the ``ste_quant`` + ``jnp.matmul`` composite it replaces.
@@ -27,8 +38,10 @@ the ``ste_quant`` + ``jnp.matmul`` composite it replaces.
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +64,13 @@ _CANDIDATES = [
     (128, 256, 128), (256, 128, 128), (256, 256, 128),
     (128, 256, 256), (512, 128, 128), (128, 512, 128),
 ]
+# Candidate split-K sizes (block_w) for the flash-decode attention kernel.
+_ATTN_CANDIDATES = [128, 256, 512, 1024, 2048]
 _VMEM_BUDGET = 8 * 1024 * 1024  # bytes of f32 tiles per grid step
 
 _AUTOTUNE: Dict[str, object] = {"measure": True, "reps": 3}
-_BLOCK_CACHE: Dict[tuple, Tuple[int, int, int]] = {}
+_BLOCK_CACHE: Dict[tuple, Tuple[int, ...]] = {}
+_MEASURED: Set[tuple] = set()   # keys whose blocks came from a real timing
 
 
 def _bucket(n: int) -> int:
@@ -73,6 +89,94 @@ def autotune_cache() -> Dict[tuple, Tuple[int, int, int]]:
 
 def reset_autotune() -> None:
     _BLOCK_CACHE.clear()
+    _MEASURED.clear()
+
+
+# -- persistence ------------------------------------------------------------
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_DEFAULT = os.path.join(".cache", "autotune.json")
+
+
+def _cache_path(path: Optional[str] = None) -> str:
+    return path or os.environ.get(_CACHE_ENV) or _CACHE_DEFAULT
+
+
+def save_autotune(path: Optional[str] = None) -> Optional[str]:
+    """Serialize the *measured* entries to the autotune cache file.
+
+    Called automatically whenever a measurement lands in the cache;
+    heuristic fallbacks are excluded (they cost nothing to recompute and
+    would shadow a future real measurement).  Entries already on disk are
+    merged, not clobbered — successive/concurrent processes measure
+    different buckets and each must keep the others' work.  Returns the
+    path written, or None when there is nothing measured to persist.
+    """
+    entries = {"|".join(map(str, key)): list(_BLOCK_CACHE[key])
+               for key in sorted(_MEASURED, key=str) if key in _BLOCK_CACHE}
+    if not entries:
+        return None
+    p = _cache_path(path)
+    try:
+        with open(p) as f:
+            on_disk = json.load(f)
+        if isinstance(on_disk, dict):
+            entries = {**on_disk, **entries}
+    except Exception:
+        pass
+    d = os.path.dirname(p)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(entries, f, indent=1, sort_keys=True)
+    return p
+
+
+def _valid_entry(key: tuple, blocks: tuple) -> bool:
+    """Semantic check on a persisted entry: arity, positivity, VMEM fit.
+
+    Guards against hand-edited files, entries written by a different
+    version, or measurements from hardware with other limits — a bad
+    entry would otherwise be trusted forever (loaded entries count as
+    measured, so nothing ever re-measures the bucket).
+    """
+    if key[0] == "attn":
+        return (len(key) == 5 and len(blocks) == 1 and blocks[0] > 0
+                and _attn_fits(blocks[0], key[2], key[3], key[4] or None))
+    if key[0] in ("nn", "nt", "tn"):
+        return (len(key) == 4 and len(blocks) == 3
+                and all(b > 0 for b in blocks)
+                and _fits(blocks, key[1], key[2], key[3]))
+    return False
+
+
+def load_autotune(path: Optional[str] = None) -> int:
+    """Load persisted measurements into the live cache (run at import).
+
+    Returns the number of entries loaded; missing/corrupt files and
+    entries that fail :func:`_valid_entry` load 0/are skipped (a stale
+    cache must never break dispatch — worst case we re-measure).
+    """
+    p = _cache_path(path)
+    if not os.path.exists(p):
+        return 0
+    try:
+        with open(p) as f:
+            data = json.load(f)
+        items = [((parts[0],) + tuple(int(x) for x in parts[1:]),
+                  tuple(int(b) for b in blocks))
+                 for ks, blocks in data.items()
+                 for parts in [ks.split("|")]]
+    except Exception:   # wrong shape, truncated, hand-edited, unreadable —
+        return 0        # a stale cache must never break dispatch
+    n = 0
+    for key, blocks in items:
+        if not _valid_entry(key, blocks):
+            continue
+        _BLOCK_CACHE[key] = blocks
+        _MEASURED.add(key)
+        n += 1
+    return n
 
 
 def set_autotune(measure: Optional[bool] = None,
@@ -94,8 +198,12 @@ def _fits(blocks, R, C, D) -> bool:
     return vmem <= _VMEM_BUDGET
 
 
-def _measure(kind: str, R: int, C: int, D: int, width) -> tuple:
-    """Time candidate tilings on dummy operands; return the fastest."""
+def _measure(kind: str, R: int, C: int, D: int, width) -> Optional[tuple]:
+    """Time candidate tilings on dummy operands; return the fastest.
+
+    None when no candidate compiled/timed (non-TPU backend) — the caller
+    falls back to the heuristic and does NOT persist the entry.
+    """
     if kind == "nn":
         sa, sb = (R, D), (D, C)
     elif kind == "nt":
@@ -124,7 +232,7 @@ def _measure(kind: str, R: int, C: int, D: int, width) -> tuple:
         t = time.perf_counter() - t0
         if t < best_t:
             best, best_t = blocks, t
-    return best or mm_blocks(kind, R, C, D)
+    return best
 
 
 def blocks_for(kind: str, R: int, C: int, D: int, *, interpret: bool,
@@ -145,12 +253,86 @@ def blocks_for(kind: str, R: int, C: int, D: int, *, interpret: bool,
     key = (kind, _bucket(R), _bucket(C), _bucket(D))
     blocks = _BLOCK_CACHE.get(key)
     if blocks is None:
-        if _AUTOTUNE["measure"]:
-            blocks = _measure(kind, key[1], key[2], key[3], width)
-        else:
-            blocks = mm_blocks(kind, R, C, D)
+        measured = (_measure(kind, key[1], key[2], key[3], width)
+                    if _AUTOTUNE["measure"] else None)
+        blocks = measured or mm_blocks(kind, R, C, D)
         _BLOCK_CACHE[key] = blocks
+        if measured:
+            _MEASURED.add(key)
+            save_autotune()
     return blocks
+
+
+# ---------------------------------------------------------------------------
+# decode-attention split selection (repro.kernels.attn)
+# ---------------------------------------------------------------------------
+
+def _attn_fits(block_w: int, G: int, hd: int, width) -> bool:
+    kv_bytes = 1 if (width or 32) <= 8 else (2 if (width or 32) <= 16 else 4)
+    vmem = (2 * block_w * hd * kv_bytes          # k + v tiles
+            + 4 * (2 * G * block_w               # scores + probs
+                   + 2 * G * hd                  # q tile + acc scratch
+                   + 2 * G)                      # m/l scratch
+            + 4 * block_w)                       # pos tile
+    return vmem <= _VMEM_BUDGET
+
+
+def _measure_attn(W: int, G: int, hd: int, width) -> Optional[tuple]:
+    """Time candidate split sizes for one attention bucket (compiled only)."""
+    from repro.core.packed import container_dtype
+    from repro.kernels.attn.ops import flash_decode
+    B, K = 1, 8
+    dt = jnp.float32 if width is None else container_dtype(width)
+    q = jnp.zeros((B, K, G, hd), jnp.float32)
+    kv = jnp.zeros((B, W, K, hd), dt)
+    pos = jnp.zeros((B, W), jnp.int32)
+    qp = jnp.full((B,), W - 1, jnp.int32)
+    e = jnp.zeros((B,), jnp.float32)
+    reps = max(1, int(_AUTOTUNE["reps"]))
+    best, best_t = None, float("inf")
+    cands = [c for c in _ATTN_CANDIDATES
+             if c <= round_up(W, 128) and _attn_fits(c, G, hd, width)]
+    for bw in cands:
+        fn = lambda: flash_decode(q, kv, kv, pos, qp, e, e, width=width,
+                                  scale=1.0, block_w=bw, interpret=False)
+        try:
+            jax.block_until_ready(fn())  # compile
+        except Exception:  # tiling rejected by the compiler — skip
+            continue
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        t = time.perf_counter() - t0
+        if t < best_t:
+            best, best_t = (bw,), t
+    return best
+
+
+def attn_blocks_for(W: int, G: int, hd: int, *, width=None,
+                    interpret: bool) -> int:
+    """Split-K size (``block_w``) for the flash-decode kernel.
+
+    Interpret mode returns the whole window — one grid step on exact
+    full-shape blocks, which is the bit-equality contract against
+    ``attn/ref.py`` (see :func:`blocks_for` for why padding/splitting
+    would drift ULPs on CPU).  Compiled buckets key on (Ŵ, G, hd, width)
+    and come from the measured cache, heuristic fallback
+    ``min(512, Ŵ→128)``.
+    """
+    if interpret:
+        return W
+    key = ("attn", _bucket(W), G, hd, width or 0)
+    blocks = _BLOCK_CACHE.get(key)
+    if blocks is None:
+        measured = (_measure_attn(key[1], G, hd, width)
+                    if _AUTOTUNE["measure"] else None)
+        blocks = measured or (min(512, round_up(W, 128)),)
+        _BLOCK_CACHE[key] = blocks
+        if measured:
+            _MEASURED.add(key)
+            save_autotune()
+    return blocks[0]
 
 
 # ---------------------------------------------------------------------------
@@ -266,5 +448,8 @@ def tape_dot(x, w, e_w, *, width: int, transpose_b: bool = False,
                      interpret=interpret)
 
 
-__all__ = ["fused_dot", "tape_dot", "blocks_for", "autotune_cache",
-           "reset_autotune", "set_autotune", "default_interpret"]
+__all__ = ["fused_dot", "tape_dot", "blocks_for", "attn_blocks_for",
+           "autotune_cache", "reset_autotune", "set_autotune",
+           "save_autotune", "load_autotune", "default_interpret"]
+
+load_autotune()   # persisted measurements survive process restarts

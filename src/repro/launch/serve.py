@@ -1,10 +1,13 @@
 """Serving CLI over the ``repro.serve`` continuous-batching engine.
 
 Mixed-length prompts, per-request budgets, greedy/temperature/top-k
-sampling, and an optionally DFXP-packed KV-cache pool:
+sampling, an optionally DFXP-packed KV-cache pool, and the fused
+flash-decode attention kernel (``--fused-decode``: dequantize in the
+attention tile loads, no per-layer f32 K/V materialization):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
-      --num-requests 4 --prompt-len 8,16,32 --max-new 16 --cache-bits 8
+      --num-requests 4 --prompt-len 8,16,32 --max-new 16 --cache-bits 8 \
+      --fused-decode
 
 ``Engine`` below is the *lockstep reference*: batched prefill, then every
 sequence decodes the same number of steps at one shared position. It frees
@@ -85,6 +88,11 @@ def main(argv=None):
     ap.add_argument("--cache-bits", type=int, default=0, choices=(0, 8, 16),
                     help="KV-cache storage: 0=float32, 8/16=DFXP-packed "
                          "mantissas with per-slot controller-managed scales")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="run decode attention as the fused Pallas "
+                         "flash-decode kernel directly on the KV pool's "
+                         "storage (packed pools dequantize int mantissas "
+                         "in the tile loads; no f32 K/V materialization)")
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -93,7 +101,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    policy = PrecisionPolicy(args.arithmetic)
+    policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     lens = _parse_lens(args.prompt_len)
     slots = args.slots or min(args.num_requests, 4)

@@ -262,7 +262,18 @@ class RawKVCodec:
     ``(k, v, pos)`` as wide arrays for the attention math. Alternative
     codecs (``repro.serve.kv_pool.PackedKVCodec``) store int mantissas +
     per-slot DFXP exponents and quantize/dequantize at this boundary.
+
+    ``fused_decode`` is the codec *capability flag*
+    ``attention_decode`` keys on: when set, the hot decode path skips
+    ``load`` entirely and calls ``fused_attention`` — the Pallas
+    flash-decode kernel reading the entry's storage containers directly
+    (for this codec that is plain f32; for the packed codec, int
+    mantissas dequantized in the tile loads). The default instance keeps
+    it off, so every existing call site retains today's exact path.
     """
+
+    def __init__(self, fused_decode: bool = False):
+        self.fused_decode = fused_decode
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
                pos: Array) -> dict:
@@ -277,6 +288,18 @@ class RawKVCodec:
 
     def load(self, entry: dict):
         return entry["k"], entry["v"], entry["pos"]
+
+    def fused_attention(self, entry: dict, qg: Array, q_pos: Array, *,
+                        scale: float, window=None, causal: bool = True):
+        """Flash-decode on the raw f32 ring buffers (``width=None``).
+
+        ``qg``: [B, K, G, hd] kv-head-major query groups; returns
+        f32 [B, K, G, hd].
+        """
+        from repro.kernels.attn.ops import flash_decode
+        return flash_decode(qg, entry["k"], entry["v"], entry["pos"], q_pos,
+                            width=None, scale=scale, window=window,
+                            causal=causal)
 
 
 RAW_KV_CODEC = RawKVCodec()
@@ -294,6 +317,13 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     ``[B]``/``[B,1]`` vector — each slot decodes at its own position.
     Returns ``(y, cache')``.
 
+    When the codec advertises ``fused_decode``, the attention runs as the
+    fused Pallas flash-decode kernel (:mod:`repro.kernels.attn`) straight
+    on the codec's storage containers — ``codec.load`` (and, for packed
+    pools, the f32 K/V materialization it implies) never executes on the
+    hot path.  The default ``RawKVCodec`` and f32 pools keep today's
+    exact einsum path.
+
     When ``dist.cp_decode`` is set (long-context serving: the cache window
     axis is sharded over ``dist.cp_axis``), the global (non-windowed)
     attention runs context-parallel via
@@ -310,7 +340,6 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
         positions = pos
     q, k_new, v_new = _qkv(params, spec, x, positions, tape, prefix)
     cache = codec.append(cache, k_new[:, 0], v_new[:, 0], positions[:, 0])
-    cache_k, cache_v, cache_pos = codec.load(cache)
     H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     G = H // K
     scale = 1.0 / math.sqrt(hd)
@@ -318,10 +347,19 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     if (dist is not None and dist.active and dist.cp_decode and dist.cp_axis
             and window is None):
         from repro.dist.cp_attention import cp_decode_attention
+        cache_k, cache_v, cache_pos = codec.load(cache)
         o = cp_decode_attention(q, cache_k, cache_v, cache_pos, positions,
                                 num_heads=H, num_kv_heads=K, head_dim=hd,
                                 cp_axes=dist.cp_axes).astype(x.dtype)
+    elif getattr(codec, "fused_decode", False):
+        # the fused kernel reads the pool's storage containers directly:
+        # no codec.load, no f32 K/V materialization on the hot path
+        qg = q.reshape(B, K, G, hd)
+        o = codec.fused_attention(cache, qg, positions[:, 0], scale=scale,
+                                  window=window, causal=spec.causal)
+        o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
     else:
+        cache_k, cache_v, cache_pos = codec.load(cache)
         qg = q.reshape(B, 1, K, G, hd)
         s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k,
                        preferred_element_type=jnp.float32) * scale

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import ScaleState
 from repro.core.policy import PrecisionPolicy
+from repro.models import layers as L
 from repro.models import transformer as T
 
 from . import kv_pool, metrics, sampler
@@ -71,7 +72,11 @@ class ServeEngine:
     max_len: per-slot KV capacity; every request needs
         ``prompt_len + max_new <= max_len``.
     cache_bits: 0 → float32 KV pool (bit-identical to the lockstep
-        engine); 8/16 → DFXP-packed mantissa pool.
+        engine); 8/16 → DFXP-packed mantissa pool.  With
+        ``policy.fused_decode`` the decode attention runs as the fused
+        Pallas flash-decode kernel straight on the pool's storage
+        (packed mantissas dequantized in the tile loads — no per-layer
+        f32 K/V materialization on the hot path).
     sampler_cfg: greedy / temperature / top-k, per-request PRNG streams.
     cache_cfg: overrides the packed pool's controller settings.
     """
@@ -94,16 +99,22 @@ class ServeEngine:
         self.sinks = {n: jnp.zeros(s + (3,), jnp.float32)
                       for n, s in gs.items() if n.startswith("g:")}
 
+        fused = bool(getattr(policy, "fused_decode", False))
         if cache_bits:
             self.cache_cfg = cache_cfg or kv_pool.CacheQuantConfig(
                 width=cache_bits)
             if self.cache_cfg.width != cache_bits:
                 raise ValueError("cache_bits and cache_cfg.width disagree")
-            self.codec: Optional[kv_pool.PackedKVCodec] = \
-                kv_pool.PackedKVCodec(self.cache_cfg)
+            self.codec = kv_pool.PackedKVCodec(self.cache_cfg,
+                                               fused_decode=fused)
         else:
-            self.cache_cfg, self.codec = None, None
-        self._pool = kv_pool.make_pool(cfg, max_slots, max_len, self.codec)
+            # f32 pool; with --fused-decode the raw codec still routes
+            # attention through the flash-decode kernel (width=None)
+            self.cache_cfg = None
+            self.codec = L.RawKVCodec(fused_decode=True) if fused else None
+        self._packed = bool(cache_bits)
+        self._pool = kv_pool.make_pool(cfg, max_slots, max_len,
+                                       self.codec if self._packed else None)
 
         # per-slot host state
         B = max_slots
@@ -181,7 +192,7 @@ class ServeEngine:
         req = self._reqs[slot]
         self._results[req.uid] = np.asarray(self._gen[slot], np.int32)
         self.metrics.on_finish(req.uid)
-        if self.codec is not None:
+        if self._packed:
             self._ovf += np.asarray(self._slot_tot(self._pool, slot),
                                     np.float64)
         self._active[slot] = False

@@ -86,8 +86,13 @@ class PackedKVCodec:
         key      : uint32 [n, B, 2]              (stochastic mode only)
     """
 
-    def __init__(self, config: CacheQuantConfig):
+    def __init__(self, config: CacheQuantConfig, fused_decode: bool = False):
         self.cfg = config
+        # capability flag attention_decode keys on: with it set, decode
+        # attention runs the fused Pallas flash-decode kernel on the int
+        # mantissas (dequant in the tile loads) and ``load`` — the f32
+        # K/V materialization below — never executes on the hot path
+        self.fused_decode = fused_decode
 
     # -- model-layer protocol (called per layer inside lax.scan) ----------
     def load(self, entry: dict):
@@ -96,6 +101,20 @@ class PackedKVCodec:
         v = entry["v_m"].astype(jnp.float32) * \
             exact_pow2(entry["v_e"])[:, None, None, None]
         return k, v, entry["pos"]
+
+    def fused_attention(self, entry: dict, qg: Array, q_pos: Array, *,
+                        scale: float, window=None, causal: bool = True):
+        """Flash-decode directly on the packed mantissas (no ``load``).
+
+        ``qg``: [B, K, G, hd] kv-head-major query groups; the kernel
+        dequantizes int8/int16 K/V tiles in-register against the per-slot
+        exponents.  Returns f32 [B, K, G, hd].
+        """
+        from repro.kernels.attn.ops import flash_decode
+        return flash_decode(qg, entry["k_m"], entry["v_m"], entry["pos"],
+                            q_pos, entry["k_e"], entry["v_e"],
+                            width=self.cfg.width, scale=scale, window=window,
+                            causal=causal)
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
                pos: Array) -> dict:
