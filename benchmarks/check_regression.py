@@ -1,0 +1,150 @@
+"""CI bench-regression gate: diff a fresh bench run against the committed
+``BENCH_kernels.json`` / ``BENCH_serve.json``.
+
+Two failure classes:
+
+* **missing rows** — every row name in the committed baseline must appear
+  in the fresh run.  A suite that silently drops a row pair (e.g. a fused
+  variant stops executing) reads as "measured, no regression" otherwise.
+* **per-row regression** — CI machines are not a perf reference, so raw
+  times are never compared across machines.  Instead each shared row's
+  ``fresh/committed`` time ratio is normalized by the **median** ratio
+  over all shared rows (the median cancels uniform machine/backend speed
+  differences), and a row whose normalized time grows beyond
+  ``1 + tolerance`` fails: *that row* got slower relative to the rest of
+  the suite — exactly what a hot-path regression looks like.
+
+Both files must be recorded at the same shapes (``meta.tiny`` must
+match) — the committed baselines are recorded with ``--tiny``, the CI
+shapes, precisely so this gate has teeth; the nightly lane records the
+full-shape rows as artifacts without gating.  A commit whose message
+carries the ``[bench-waiver]`` tag skips the gate (the workflow checks
+the tag before invoking this script).
+
+Tolerance calibration (measured on idle cross-runs of the tiny suites):
+serve rows are whole-wave aggregates that agree within ~1.3x between
+benign runs, but shared-VM throttling occasionally inflates a whole row
+3x for one run — which is why both sides of the gate use per-row
+**minimums**: the committed baselines are min-merged over several
+recording runs (``--merge-out``), and the workflow's retry min-merges
+its two fresh runs, so one-sided throttle spikes cancel while real
+regressions (present in every run) survive the 25% band.  Kernel
+micro-rows are sub-ms minimums that spread several-x regardless, so the
+workflow gates them at a wide 4.0 band — catching recompile-per-call
+and accidentally-quadratic regressions while row *presence* stays
+strict.
+
+Usage::
+
+    python -m benchmarks.check_regression \
+        --committed BENCH_serve.json --fresh /tmp/BENCH_serve.json \
+        --tolerance 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import List
+
+
+def compare(committed: dict, fresh: dict, tolerance: float = 0.25,
+            metric: str = "us_per_call") -> List[str]:
+    """Return the list of gate violations (empty = pass)."""
+    problems: List[str] = []
+    base = {r["name"]: float(r[metric]) for r in committed.get("rows", [])}
+    new = {r["name"]: float(r[metric]) for r in fresh.get("rows", [])}
+    if not base:
+        return ["committed baseline has no rows"]
+
+    missing = sorted(set(base) - set(new))
+    problems += [f"missing row: {n}" for n in missing]
+
+    c_tiny = committed.get("meta", {}).get("tiny")
+    f_tiny = fresh.get("meta", {}).get("tiny")
+    if c_tiny != f_tiny:
+        # different shapes make per-row ratios meaningless — this is a
+        # recording-protocol error, not a perf signal
+        problems.append(
+            f"shape mismatch: committed tiny={c_tiny} vs fresh "
+            f"tiny={f_tiny} — re-record the baseline at CI shapes")
+        return problems
+
+    shared = [n for n in base if n in new and base[n] > 0]
+    if not shared:
+        return problems
+    ratios = {n: new[n] / base[n] for n in shared}
+    med = statistics.median(ratios.values())
+    if med <= 0:
+        return problems + ["non-positive median ratio (corrupt timings?)"]
+    for n in sorted(shared):
+        norm = ratios[n] / med
+        if norm > 1.0 + tolerance:
+            problems.append(
+                f"regression: {n} is {norm:.2f}x the suite median "
+                f"(committed {base[n]:.1f}us -> fresh {new[n]:.1f}us, "
+                f"tolerance {1.0 + tolerance:.2f}x)")
+    return problems
+
+
+def merge_min(paths: List[str]) -> dict:
+    """Per-row minimum across several runs of the same suite.
+
+    Shared-VM throttling inflates whole rows for seconds at a time; the
+    min across independent runs is the machine's actual floor, which is
+    what both sides of the gate should compare.  Rows must exist in the
+    first file; extra rows in later files are ignored, missing ones keep
+    the best value seen so far.  ``meta`` is taken from the first file.
+    """
+    merged = json.load(open(paths[0]))
+    best = {r["name"]: r for r in merged["rows"]}
+    for p in paths[1:]:
+        for r in json.load(open(p)).get("rows", []):
+            cur = best.get(r["name"])
+            if cur is not None and r["us_per_call"] < cur["us_per_call"]:
+                best[r["name"]] = r
+    merged["rows"] = [best[r["name"]] for r in merged["rows"]]
+    return merged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--committed",
+                    help="baseline JSON committed in the repo")
+    ap.add_argument("--fresh", nargs="+", default=[],
+                    help="JSON(s) produced by this CI run; several files "
+                         "are min-merged per row before comparing")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed median-normalized slowdown per row")
+    ap.add_argument("--merge-out",
+                    help="write the min-merge of --fresh here and exit 0 "
+                         "(baseline (re-)recording helper; no gating)")
+    args = ap.parse_args(argv)
+    if args.merge_out:
+        with open(args.merge_out, "w") as f:
+            json.dump(merge_min(args.fresh), f, indent=1)
+        print(f"wrote per-row min of {len(args.fresh)} run(s) -> "
+              f"{args.merge_out}")
+        return 0
+    if not args.committed or not args.fresh:
+        ap.error("--committed and --fresh are required for gating")
+    with open(args.committed) as f:
+        committed = json.load(f)
+    fresh = merge_min(args.fresh)
+    problems = compare(committed, fresh, tolerance=args.tolerance)
+    if problems:
+        for p in problems:
+            print(f"BENCH GATE: {p}", file=sys.stderr)
+        print(f"bench gate FAILED ({len(problems)} problem(s)); a "
+              f"deliberate perf trade-off can be waived with a "
+              f"[bench-waiver] commit-message tag", file=sys.stderr)
+        return 1
+    n = len(committed.get("rows", []))
+    print(f"bench gate OK: {n} baseline rows present, none regressed "
+          f"beyond {args.tolerance:.0%} of the suite median")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

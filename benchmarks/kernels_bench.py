@@ -25,13 +25,21 @@ from repro.kernels.qmatmul.ops import qmatmul, qmm
 WIDTH = 10
 
 
-def _time(fn, *args, reps=5):
+def _time(fn, *args, reps=5, budget_s=0.25, cap=25):
+    """Best-of-N microseconds, N adaptive: at least ``reps`` calls, and for
+    cheap ops keep repeating until ``budget_s`` of measured time (capped at
+    ``cap`` calls).  The *min* is what the regression gate diffs — on
+    shared CI machines the mean folds in scheduler noise that a 25%
+    tolerance band cannot absorb, and sub-ms rows need many samples
+    before their min stabilizes."""
     fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    best, spent, n = float("inf"), 0.0, 0
+    while n < reps or (spent < budget_s and n < cap):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        best, spent, n = min(best, dt), spent + dt, n + 1
+    return best * 1e6
 
 
 def _q(x, e):
@@ -81,18 +89,22 @@ def _train_step_row(fused: bool, steps: int):
     batch = tiny_maxout_batch()
     state, m = step(state, batch, jax.random.PRNGKey(2))   # warmup/compile
     jax.block_until_ready(m["loss"])
-    t0 = time.perf_counter()
-    for i in range(steps):
-        state, m = step(state, batch, jax.random.PRNGKey(3 + i))
-    jax.block_until_ready(m["loss"])
-    return (time.perf_counter() - t0) / steps * 1e6
+    best, spent, n = float("inf"), 0.0, 0
+    while n < steps or (spent < 0.25 and n < 25):   # see _time
+        t0 = time.perf_counter()
+        state, m = step(state, batch, jax.random.PRNGKey(3 + n))
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        best, spent, n = min(best, dt), spent + dt, n + 1
+    return best * 1e6
 
 
 def run(tiny: bool = False):
     """``tiny=True``: CI-smoke shapes — asserts the paths execute, not perf."""
     out = []
     mode = "interp" if default_interpret() else "tpu"
-    reps = 2 if tiny else 5
+    # tiny shapes are the regression-gate baseline: more reps, less noise
+    reps = 5
     e = jnp.float32(-6)
 
     # -- quantize -----------------------------------------------------------
@@ -180,8 +192,30 @@ def run(tiny: bool = False):
                 _time(lambda *a: flash_decode(*a, width=8, scale=scale),
                       q4, km, vm, pos, qpos, exps, exps, reps=reps), mflop))
 
+    # -- chunked prefill: dequant composite vs fused flash-prefill ----------
+    C = 4 if tiny else 32
+    kq2, kn2 = jax.random.split(jax.random.PRNGKey(3))
+    qc = jax.random.normal(kq2, (B, C, K_kv, G, hd))
+    knew = jax.random.normal(kn2, (B, C, K_kv, hd))
+    p0 = jnp.full((B,), W // 2, jnp.int32)       # half the pool is history
+    nv = jnp.full((B,), C, jnp.int32)
+    mflop = 4 * B * C * (W + C) * K_kv * G * hd / 1e6
+    tag = f"{B}x{C}x{W}x{K_kv * G}x{hd}"
+
+    from repro.kernels.attn import ref as AR
+    from repro.kernels.attn.ops import flash_prefill
+    prefill_jnp = jax.jit(lambda *a: AR.prefill_attention_ref(
+        *a, k_exp=exps, v_exp=exps, width=8, scale=scale))
+    out.append((f"kernels/attn_prefill_jnp_{tag}",
+                _time(prefill_jnp, qc, km, vm, pos, knew, knew, p0, nv,
+                      reps=reps), mflop))
+    out.append((f"kernels/attn_prefill_fused_{mode}_{tag}",
+                _time(lambda *a: flash_prefill(*a, width=8, scale=scale),
+                      qc, knew, knew, km, vm, pos, p0, nv, exps, exps,
+                      reps=reps), mflop))
+
     # -- full train step (fwd + dgrad + wgrad per dot site) -----------------
-    steps = 1 if tiny else 3
+    steps = 3
     out.append(("kernels/train_step_jnp_maxout16",
                 _train_step_row(False, steps), 1.0))
     out.append((f"kernels/train_step_fused_{mode}_maxout16",

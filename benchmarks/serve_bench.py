@@ -1,9 +1,9 @@
 """Serving benchmarks: sequential vs continuous-batched, f32 vs packed,
-fused vs unfused decode attention.
+fused vs unfused decode attention, whole-prompt vs chunked prefill.
 
 Rows follow the repo convention ``(name, us_per_call, derived)`` where
 ``us_per_call`` is microseconds per generated token and ``derived`` is the
-aggregate tok/s. Three comparisons matter:
+aggregate tok/s. Four comparisons matter:
 
 * ``serve_sequential_f32`` vs ``serve_batched_f32`` — the continuous-
   batching win: N requests through 1 slot vs N slots.
@@ -17,10 +17,19 @@ aggregate tok/s. Three comparisons matter:
   int8/int16 rows are where the smaller cache turns into decode
   *bandwidth* — no per-layer f32 K/V materialization on the hot path
   (``benchmarks/roofline.py --kv-report`` prints the expected ratios).
+* ``serve_batched_*`` vs ``serve_batched_*_chunked`` — the chunked
+  prefill scheduler (``--prefill-chunk``): mixed-length requests admit
+  immediately and prefill one chunk per step interleaved with decode,
+  ONE prefill jit total, vs the grouped whole-prompt path compiling per
+  (group, length).  The bench prompt mix has non-partnered lengths, so
+  the chunked rows also price the TTFT scheduling the gate protects.
 
-``tiny=True`` is the CI smoke contract: 2 mixed-length requests, int8
-cache, asserting every request finishes with its full budget — execution,
-not perf.
+``tiny=True`` is the CI smoke contract (2 mixed-length requests, int8
+cache, every request finishing with its full budget — execution, not
+perf) AND the recording protocol of the committed ``BENCH_serve.json``:
+the CI bench-regression gate (``benchmarks/check_regression.py``) diffs a
+fresh ``--tiny`` run against the committed file row-by-row, so the
+baseline must be recorded at the same shapes.
 """
 from __future__ import annotations
 
@@ -45,37 +54,49 @@ def _wave(eng, prompts, max_new):
     return sum(len(out[u]) for u in uids), dt
 
 
-def _drive(cfg, params, prompts, max_new, *, slots, cache_bits, fused=False):
-    eng = ServeEngine(cfg, PrecisionPolicy("float32", fused_decode=fused),
+def _drive(cfg, params, prompts, max_new, *, slots, cache_bits, fused=False,
+           chunk=0, waves=1):
+    eng = ServeEngine(cfg, PrecisionPolicy("float32", fused_decode=fused,
+                                           prefill_chunk=chunk),
                       params, max_slots=slots,
                       max_len=max(len(p) for p in prompts) + max_new,
                       cache_bits=cache_bits)
     _wave(eng, prompts, max_new)            # warmup: pays every compile
     eng.reset_metrics()
-    return _wave(eng, prompts, max_new)     # steady-state wave
+    best = None
+    for _ in range(waves):                  # best-of: the gate's metric —
+        toks, dt = _wave(eng, prompts, max_new)   # shared CI machines
+        if best is None or dt < best[1]:          # jitter the mean badly
+            best = (toks, dt)
+    return best
 
 
 def run(tiny: bool = False):
     cfg = configs.get_smoke("llama3_8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     if tiny:
-        lens, max_new, slots = (5, 9), 4, 2
+        lens, max_new, slots, chunk = (5, 9), 4, 2, 4
     else:
-        lens, max_new, slots = (16, 32, 32, 16, 32, 32, 16, 32), 24, 4
+        lens, max_new, slots, chunk = \
+            (16, 32, 32, 16, 32, 32, 16, 32), 24, 4, 16
     prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i),
                                              (plen,), 0, cfg.vocab_size))
                for i, plen in enumerate(lens)]
 
     rows = []
-    variants = [("serve_sequential_f32", 1, 0, False),
-                ("serve_batched_f32", slots, 0, False),
-                ("serve_batched_f32_fused", slots, 0, True),
-                ("serve_batched_int8", slots, 8, False),
-                ("serve_batched_int8_fused", slots, 8, True),
-                ("serve_batched_int16", slots, 16, False),
-                ("serve_batched_int16_fused", slots, 16, True)]
-    for name, n_slots, bits, fused in variants:
-        toks, dt = _drive(cfg, params, prompts, max_new,
-                          slots=n_slots, cache_bits=bits, fused=fused)
+    variants = [("serve_sequential_f32", 1, 0, False, 0),
+                ("serve_batched_f32", slots, 0, False, 0),
+                ("serve_batched_f32_fused", slots, 0, True, 0),
+                ("serve_batched_f32_chunked", slots, 0, False, chunk),
+                ("serve_batched_int8", slots, 8, False, 0),
+                ("serve_batched_int8_fused", slots, 8, True, 0),
+                ("serve_batched_int8_chunked", slots, 8, False, chunk),
+                ("serve_batched_int8_chunked_fused", slots, 8, True, chunk),
+                ("serve_batched_int16", slots, 16, False, 0),
+                ("serve_batched_int16_fused", slots, 16, True, 0)]
+    for name, n_slots, bits, fused, pc in variants:
+        toks, dt = _drive(cfg, params, prompts, max_new, slots=n_slots,
+                          cache_bits=bits, fused=fused, chunk=pc,
+                          waves=3 if tiny else 1)
         rows.append((name, dt / toks * 1e6, toks / dt))
     return rows

@@ -1,9 +1,15 @@
 """Continuous-batching serving with mixed-length prompts + int8 KV cache.
 
-Six requests with three different prompt lengths share four slots: equal
-lengths prefill together, the rest queue and get admitted as decoding
-slots free up. The KV pool stores int8 DFXP mantissas with per-slot
-controller-managed scales.
+Six requests with three different prompt lengths share four slots. The
+first run uses whole-prompt prefill (equal lengths grouped, the rest
+queue until a decoding slot frees); the second enables chunked prefill
+(`--prefill-chunk 8`): every request admits immediately, one 8-token
+chunk runs per engine step interleaved with decode, and its K/V is
+quantized straight into the int8 pool — one prefill compile for all
+three lengths. (Under dfxp arithmetic the two paths are
+numerics-equivalent, not token-identical — the activation quantizer
+re-rounds reordered float ops; run both with `--arithmetic float32`
+to see identical greedy streams.)
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,7 +17,9 @@ from repro.launch.serve import main as serve_main
 
 
 if __name__ == "__main__":
-    serve_main(["--arch", "llama3_8b", "--smoke", "--arithmetic", "dfxp",
-                "--num-requests", "6", "--slots", "4",
-                "--prompt-len", "8,16,32", "--max-new", "16",
-                "--cache-bits", "8"])
+    args = ["--arch", "llama3_8b", "--smoke", "--arithmetic", "dfxp",
+            "--num-requests", "6", "--slots", "4",
+            "--prompt-len", "8,16,32", "--max-new", "16",
+            "--cache-bits", "8"]
+    serve_main(args)
+    serve_main(args + ["--prefill-chunk", "8", "--fused-decode"])

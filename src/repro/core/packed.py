@@ -53,17 +53,23 @@ def qrange(width: int):
     return float(2 ** (width - 1) - 1), -float(2 ** (width - 1))
 
 
-def _overflow_counts(m: Array, width: int, axes=None):
+def _overflow_counts(m: Array, width: int, axes=None, mask=None):
     """(n_ovf, n_ovf_at_half_scale) over ``axes`` — the §5 controller pair.
 
     Counting matches ``quant.fixed_round``, including the asymmetric
     two's-complement range: ``qmin = -(qmax + 1)`` is representable and
-    must not count as overflow.
+    must not count as overflow.  ``mask`` (bool, broadcastable to ``m``)
+    restricts the count to selected elements — the chunked KV append
+    counts only the rows it actually writes.
     """
     qmax, qmin = qrange(width)
-    ovf = jnp.sum((m > qmax) | (m < qmin), axis=axes, dtype=jnp.float32)
-    ovfh = jnp.sum((m > qmax / 2) | (m < qmin / 2), axis=axes,
-                   dtype=jnp.float32)
+    over = (m > qmax) | (m < qmin)
+    overh = (m > qmax / 2) | (m < qmin / 2)
+    if mask is not None:
+        over = over & mask
+        overh = overh & mask
+    ovf = jnp.sum(over, axis=axes, dtype=jnp.float32)
+    ovfh = jnp.sum(overh, axis=axes, dtype=jnp.float32)
     return ovf, ovfh
 
 

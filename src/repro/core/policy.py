@@ -65,8 +65,20 @@ class PrecisionPolicy:
     #   int8/int16 mantissas in the tile loads instead of materializing
     #   f32 K/V per layer (codec.load), which is where the 4×/2× HBM-read
     #   win of the packed cache actually cashes out. CLI --fused-decode.
+    prefill_chunk: int = 0           # serve-side: chunked prefill size C.
+    #   0 = whole-prompt prefill (the bit-for-bit reference path, one jit
+    #   per (group, prompt_len)). C > 0: ServeEngine admits any queued
+    #   request into any free slot immediately and runs one C-token
+    #   prefill chunk per engine step interleaved with decode — ONE jit
+    #   for any prompt length (ragged tails masked in-kernel), chunk K/V
+    #   quantized straight into the packed pool (codec.append_chunk) and
+    #   history attended off the packed storage (flash-prefill kernel
+    #   when fused_decode). Attention-family models only; MoE/SSM keep
+    #   the whole-prompt path. CLI --prefill-chunk.
 
     def __post_init__(self):
+        if self.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
         if self.arithmetic not in (*_FLOATS, "fixed", "dfxp", "observe"):
             raise ValueError(f"unknown arithmetic {self.arithmetic!r}")
         if self.storage not in ("sim", "packed"):

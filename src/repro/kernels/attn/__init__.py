@@ -1,3 +1,4 @@
-"""Fused Pallas decode-attention over the packed KV pool (flash-decode)."""
-from .ops import flash_decode  # noqa: F401
-from .ref import decode_attention_ref  # noqa: F401
+"""Fused Pallas attention over the packed KV pool: flash-decode (single
+query) and flash-prefill (chunked prefill with quantize-on-write)."""
+from .ops import flash_decode, flash_prefill  # noqa: F401
+from .ref import decode_attention_ref, prefill_attention_ref  # noqa: F401

@@ -24,6 +24,7 @@ from repro.kernels import dispatch
 from repro.kernels._tiling import resolve_interpret
 
 from .attn_kernel import flash_decode_call
+from .prefill_kernel import flash_prefill_call
 
 Array = jax.Array
 
@@ -64,3 +65,47 @@ def flash_decode(q: Array, k: Array, v: Array, pos: Array, q_pos: Array,
                              pos.astype(jnp.int32), qpos, steps, width=width,
                              block_w=block_w, scale=scale, window=window,
                              causal=causal, interpret=interpret)
+
+
+def flash_prefill(q: Array, k_new: Array, v_new: Array, k: Array, v: Array,
+                  pos: Array, p0: Array, n_valid: Array, k_exp=None,
+                  v_exp=None, *, width: Optional[int] = None, scale: float,
+                  window: Optional[int] = None, causal: bool = True,
+                  block_w: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> Array:
+    """Fused chunked-prefill GQA attention over a (packed) KV ring buffer.
+
+    ``q``: [B, C, K, G, hd] kv-head-major query groups for a chunk of
+    ``C`` positions starting at ``p0`` [B] · ``k_new``/``v_new``: f32
+    [B, C, K, hd] the chunk's own fresh K/V (attended causally from
+    registers, never from the pool) · ``k``/``v``: [B, W, K, hd]
+    int8/int16 mantissas (``width=8|16``) or raw floats (``width=None``)
+    — the pool's history, masked to ``0 <= pos < p0`` · ``n_valid``: [B]
+    valid chunk rows (ragged final chunk).  Returns f32 [B, C, K, G, hd];
+    numerics are :func:`repro.kernels.attn.ref.prefill_attention_ref`
+    (bit-identical in interpret mode).
+    """
+    B, C, K, G, hd = q.shape
+    W = k.shape[1]
+    interpret = resolve_interpret(interpret)
+    if block_w is None:
+        block_w = dispatch.prefill_blocks_for(W, C, G, hd, width=width,
+                                              interpret=interpret)
+    block_w = min(block_w, W)
+
+    if width is None:
+        steps = jnp.ones((B, 2), jnp.float32)
+    else:
+        steps = jnp.stack([exact_pow2(jnp.asarray(k_exp, jnp.float32)),
+                           exact_pow2(jnp.asarray(v_exp, jnp.float32))],
+                          axis=-1)
+    p0 = jnp.asarray(p0, jnp.int32).reshape(B, 1)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(B, 1)
+
+    return flash_prefill_call(q.astype(jnp.float32),
+                              k_new.astype(jnp.float32),
+                              v_new.astype(jnp.float32), k, v,
+                              pos.astype(jnp.int32), p0, nv, steps,
+                              width=width, block_w=block_w, scale=scale,
+                              window=window, causal=causal,
+                              interpret=interpret)

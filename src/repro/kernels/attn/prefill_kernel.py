@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: fused chunked-prefill attention over a packed KV pool.
+
+A fixed-size chunk of ``C`` query positions attends **directly on the
+pool's storage containers** — tiles of int8/int16 K/V mantissas stream
+from HBM and are dequantized in-register against the per-layer/per-slot
+power-of-two step, exactly like the flash-decode kernel
+(:mod:`repro.kernels.attn.attn_kernel`) — plus its **own** chunk K/V in
+f32, taken from the fresh projections rather than the pool so ring
+eviction by the chunk's own write can never hide in-window keys.
+
+Grid layout (compiled path)::
+
+        grid = (B, K, nsplit + 1)        nsplit = ceil(W / block_w)
+
+        q         [B, C, K, G, hd] -> tile [C, G, hd]      (one kv-head)
+        k_new/v_new [B, C, K, hd]  -> tile [C, hd]         (f32 chunk KV)
+        k/v       [B, W, K, hd]    -> tile [block_w, hd]   (pool storage)
+        pos       [B, W]           -> tile [1, block_w]
+        out       [B, C, K, G, hd] <- written on the last grid step
+
+Splits ``0 .. nsplit-1`` walk the pool history (mask: ``0 <= pos < p0``,
+window, ragged-tail bounds — all in-kernel, the pool is never padded or
+copied); the final step ``nsplit`` scores the chunk against its own K/V
+(causal ``j <= c``, ragged rows ``>= n_valid`` masked) and performs the
+``acc / l`` reduction.  VMEM scratch carries the running
+``(m, l, acc)`` with rows flattened to ``C*G`` (query position major),
+combined across steps with the standard flash correction.
+
+Interpret mode (any non-TPU backend) runs ONE grid step on full-shape
+blocks and executes :func:`repro.kernels.attn.ref.chunk_attend` verbatim
+on the dequantized arrays — identical ops on identical shapes, making
+the fused kernel **bit**-identical to the composite on CPU (the contract
+every kernel family in this repo keeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as R
+from .attn_kernel import _VMEM, _dequant
+
+
+def _batched_kernel(p0_ref, nv_ref, steps_ref, q_ref, kn_ref, vn_ref, k_ref,
+                    v_ref, pos_ref, o_ref, *, width, scale: float, window,
+                    causal: bool):
+    """One grid step, full-shape blocks: ref.chunk_attend on loaded arrays."""
+    exp = (slice(None), None, None, None)
+    kf = _dequant(k_ref[...], steps_ref[...][:, 0][exp], width)
+    vf = _dequant(v_ref[...], steps_ref[...][:, 1][exp], width)
+    o_ref[...] = R.chunk_attend(q_ref[...], kf, vf, pos_ref[...],
+                                kn_ref[...], vn_ref[...], p0_ref[:, 0],
+                                nv_ref[:, 0], scale=scale, window=window,
+                                causal=causal)
+
+
+def _split_kernel(p0_ref, nv_ref, steps_ref, q_ref, kn_ref, vn_ref, k_ref,
+                  v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref, *, width,
+                  scale: float, window, causal: bool, nsplit: int, C: int,
+                  G: int, hd: int, block_w: int, W: int):
+    r = pl.program_id(2)
+    rows = C * G
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qf = q_ref[...].reshape(rows, hd)           # row = c * G + g
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // G
+    p0 = p0_ref[0, 0]
+    nv = nv_ref[0, 0]
+
+    def _update(kf, vf, valid):
+        s = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_ref[...] - m_new)      # exp(-inf - m) == 0 on init
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(r < nsplit)
+    def _history():
+        kf = _dequant(k_ref[...].reshape(block_w, hd), steps_ref[0, 0], width)
+        vf = _dequant(v_ref[...].reshape(block_w, hd), steps_ref[0, 1], width)
+        pos = pos_ref[...]                      # [1, block_w] int32
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)
+        inb = r * block_w + lane < W            # ragged last split
+        vf = jnp.where(inb.reshape(block_w, 1), vf, 0.0)
+        d = (p0 + cidx) - pos                   # [rows, block_w]
+        valid = inb & (pos >= 0) & (pos < p0) & (cidx < nv)
+        if causal:
+            valid = valid & (d >= 0)
+        if window:
+            valid = valid & (d < window)
+        _update(kf, vf, valid)
+
+    @pl.when(r == nsplit)
+    def _self_and_done():
+        knf = kn_ref[...].reshape(C, hd)
+        vnf = vn_ref[...].reshape(C, hd)
+        j = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+        dj = cidx - j                           # [rows, C]
+        valid = (cidx < nv) & (j < nv)
+        if causal:
+            valid = valid & (dj >= 0)
+        if window:
+            valid = valid & (dj < window)
+        _update(knf, vnf, valid)
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.reshape(1, C, 1, G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "block_w", "scale", "window", "causal", "interpret"))
+def flash_prefill_call(q, k_new, v_new, k, v, pos, p0, nv, steps, *, width,
+                       block_w: int, scale: float, window, causal: bool,
+                       interpret: bool):
+    """Blocked chunked-prefill over the raw (unpadded) pool buffers.
+
+    ``q``: f32 [B, C, K, G, hd] · ``k_new``/``v_new``: f32 [B, C, K, hd] ·
+    ``k``/``v``: int8/int16/f32 [B, W, K, hd] · ``pos``: int32 [B, W] ·
+    ``p0``/``nv``: int32 [B, 1] · ``steps``: f32 [B, 2] dequant steps.
+    Returns f32 [B, C, K, G, hd].  ``W`` need not be a ``block_w``
+    multiple; ``block_w >= W`` in interpret mode runs the single-step
+    full-shape body (bit-identical to ``ref.chunk_attend``).
+    """
+    B, C, K, G, hd = q.shape
+    W = k.shape[1]
+    out_shape = jax.ShapeDtypeStruct((B, C, K, G, hd), jnp.float32)
+
+    if interpret and (block_w >= W or _VMEM is None):
+        return pl.pallas_call(
+            functools.partial(_batched_kernel, width=width, scale=scale,
+                              window=window, causal=causal),
+            out_shape=out_shape,
+            interpret=True,
+        )(p0, nv, steps, q, k_new, v_new, k, v, pos)
+    if _VMEM is None:  # pragma: no cover — compiled TPU implies pltpu
+        raise RuntimeError(
+            "split-K flash-prefill needs jax.experimental.pallas.tpu "
+            "memory spaces for its VMEM scratch")
+
+    nsplit = pl.cdiv(W, block_w)
+    # history splits walk the pool; the last grid step re-reads split
+    # nsplit-1's tile (clamped index) but only touches the chunk's own KV
+    last = nsplit - 1
+    return pl.pallas_call(
+        functools.partial(_split_kernel, width=width, scale=scale,
+                          window=window, causal=causal, nsplit=nsplit,
+                          C=C, G=G, hd=hd, block_w=block_w, W=W),
+        grid=(B, K, nsplit + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, r: (b, 0)),            # p0
+            pl.BlockSpec((1, 1), lambda b, h, r: (b, 0)),            # nv
+            pl.BlockSpec((1, 2), lambda b, h, r: (b, 0)),            # steps
+            pl.BlockSpec((1, C, 1, G, hd), lambda b, h, r: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, r: (b, 0, h, 0)),  # kn
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, r: (b, 0, h, 0)),  # vn
+            pl.BlockSpec((1, block_w, 1, hd),
+                         lambda b, h, r: (b, jnp.minimum(r, last), h, 0)),
+            pl.BlockSpec((1, block_w, 1, hd),
+                         lambda b, h, r: (b, jnp.minimum(r, last), h, 0)),
+            pl.BlockSpec((1, block_w),
+                         lambda b, h, r: (b, jnp.minimum(r, last))),  # pos
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, G, hd),
+                               lambda b, h, r: (b, 0, h, 0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=[_VMEM((C * G, 1), jnp.float32),    # running max
+                        _VMEM((C * G, 1), jnp.float32),    # denominator
+                        _VMEM((C * G, hd), jnp.float32)],  # numerator
+        interpret=interpret,
+    )(p0, nv, steps, q, k_new, v_new, k, v, pos)

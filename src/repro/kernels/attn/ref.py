@@ -64,6 +64,67 @@ def attend(qf: Array, kf: Array, vf: Array, pos: Array, q_pos: Array, *,
     return o / jnp.maximum(el, 1e-30)
 
 
+def chunk_attend(qf: Array, kf: Array, vf: Array, pos: Array, k_new: Array,
+                 v_new: Array, p0: Array, n_valid: Array, *, scale: float,
+                 window: Optional[int] = None, causal: bool = True) -> Array:
+    """Chunked-prefill attention on dequantized (f32) operands.
+
+    A chunk of ``C`` query positions starting at absolute position ``p0``
+    attends (a) the already-written pool **history** — ring entries with
+    ``0 <= pos < p0`` — and (b) its **own** chunk K/V causally, taken from
+    the fresh f32 projections (never from the pool, so ring eviction by
+    the chunk's own write can't hide in-window keys).  One joint flash
+    softmax spans both score blocks, which is the order the split-K
+    prefill kernel reproduces (history splits first, self block last).
+
+    ``qf``: [B, C, K, G, hd] · ``kf``/``vf``: [B, W, K, hd] ·
+    ``pos``: int32 [B, W] · ``k_new``/``v_new``: f32 [B, C, K, hd] ·
+    ``p0``/``n_valid``: int32 [B] (``n_valid < C`` marks a ragged final
+    chunk; rows past it are masked everywhere and their output is
+    garbage-by-contract).  Returns f32 [B, C, K, G, hd].
+    """
+    B, C, K, G, hd = qf.shape
+    W = kf.shape[1]
+    cpos = jnp.arange(C, dtype=jnp.int32)
+    q_pos = p0[:, None] + cpos[None, :]                    # [B, C]
+    row_ok = cpos[None, :] < n_valid[:, None]              # [B, C]
+
+    sh = jnp.einsum("bckgh,bwkh->bkgcw", qf, kf,
+                    preferred_element_type=jnp.float32) * scale
+    d = q_pos[:, :, None] - pos[:, None, :]                # [B, C, W]
+    vh = (pos[:, None, :] >= 0) & (pos[:, None, :] < p0[:, None, None]) \
+        & row_ok[:, :, None]
+    if causal:
+        vh = vh & (d >= 0)
+    if window:
+        vh = vh & (d < window)
+
+    ss = jnp.einsum("bckgh,bjkh->bkgcj", qf, k_new,
+                    preferred_element_type=jnp.float32) * scale
+    dj = cpos[:, None] - cpos[None, :]                     # [C, C]
+    vs = row_ok[:, :, None] & row_ok[:, None, :]
+    if causal:
+        vs = vs & (dj >= 0)[None]
+    if window:
+        vs = vs & (dj < window)[None]
+
+    v4h = vh[:, None, None]                                # [B,1,1,C,W]
+    v4s = vs[:, None, None]                                # [B,1,1,C,C]
+    s = jnp.concatenate([jnp.where(v4h, sh, -1e30),
+                         jnp.where(v4s, ss, -1e30)], axis=-1)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    vcat = jnp.concatenate([jnp.broadcast_to(v4h, sh.shape),
+                            jnp.broadcast_to(v4s, ss.shape)], axis=-1)
+    p = jnp.where(vcat, jnp.exp(s - m), 0.0)
+    el = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgcw,bwkh->bkgch", p[..., :W], vf,
+                   preferred_element_type=jnp.float32) \
+        + jnp.einsum("bkgcj,bjkh->bkgch", p[..., W:], v_new,
+                     preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(el, 1e-30)
+    return o.transpose(0, 3, 1, 2, 4)                      # [B, C, K, G, hd]
+
+
 def dequant(m: Array, e: Array) -> Array:
     """[B, W, K, hd] mantissas × per-row exponents [B] → f32 values."""
     return m.astype(jnp.float32) * exact_pow2(e)[:, None, None, None]
@@ -88,3 +149,23 @@ def decode_attention_ref(q: Array, k: Array, v: Array, pos: Array,
         kf, vf = dequant(k, k_exp), dequant(v, v_exp)
     return attend(qf, kf, vf, pos, q_pos, scale=scale, window=window,
                   causal=causal)
+
+
+def prefill_attention_ref(q: Array, k: Array, v: Array, pos: Array,
+                          k_new: Array, v_new: Array, p0: Array,
+                          n_valid: Array, *, k_exp=None, v_exp=None,
+                          width: Optional[int] = None, scale: float,
+                          window: Optional[int] = None,
+                          causal: bool = True) -> Array:
+    """Chunked-prefill composite: dequantize (when ``width``) then
+    :func:`chunk_attend` — the numerics contract of the flash-prefill
+    kernel, in the :class:`repro.serve.kv_pool.PackedKVCodec` entry layout
+    (one layer, leading layer dim stripped)."""
+    qf = q.astype(jnp.float32)
+    if width is None:
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    else:
+        kf, vf = dequant(k, k_exp), dequant(v, v_exp)
+    return chunk_attend(qf, kf, vf, pos, k_new.astype(jnp.float32),
+                        v_new.astype(jnp.float32), p0, n_valid, scale=scale,
+                        window=window, causal=causal)

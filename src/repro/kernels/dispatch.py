@@ -143,6 +143,10 @@ def _valid_entry(key: tuple, blocks: tuple) -> bool:
     if key[0] == "attn":
         return (len(key) == 5 and len(blocks) == 1 and blocks[0] > 0
                 and _attn_fits(blocks[0], key[2], key[3], key[4] or None))
+    if key[0] == "prefill":
+        return (len(key) == 5 and len(blocks) == 1 and blocks[0] > 0
+                and _prefill_fits(blocks[0], key[1], key[2], key[3],
+                                  key[4] or None))
     if key[0] in ("nn", "nt", "tn"):
         return (len(key) == 4 and len(blocks) == 3
                 and all(b > 0 for b in blocks)
@@ -336,6 +340,90 @@ def attn_blocks_for(W: int, G: int, hd: int, *, width=None,
 
 
 # ---------------------------------------------------------------------------
+# chunked-prefill split selection (repro.kernels.attn flash_prefill)
+# ---------------------------------------------------------------------------
+
+# Representative history length the prefill autotuner measures at: the
+# bucket key deliberately drops W (the split size barely depends on it —
+# it tiles the history walk), so one measurement serves every pool depth.
+_PREFILL_MEASURE_W = 4096
+
+
+def _prefill_fits(block_w: int, C: int, G: int, hd: int, width) -> bool:
+    kv_bytes = 1 if (width or 32) <= 8 else (2 if (width or 32) <= 16 else 4)
+    rows = C * G
+    vmem = (2 * block_w * hd * kv_bytes          # k + v history tiles
+            + 4 * (2 * rows * max(block_w, C)    # scores + probs
+                   + 2 * rows * hd               # q tile + acc scratch
+                   + 2 * rows                    # m/l scratch
+                   + 2 * C * hd)                 # f32 chunk k/v tiles
+            + 4 * block_w)                       # pos tile
+    return vmem <= _VMEM_BUDGET
+
+
+def _measure_prefill(C: int, G: int, hd: int, width) -> Optional[tuple]:
+    """Time candidate split sizes for one prefill bucket (compiled only)."""
+    from repro.core.packed import container_dtype
+    from repro.kernels.attn.ops import flash_prefill
+    B, K, W = 1, 8, _PREFILL_MEASURE_W
+    dt = jnp.float32 if width is None else container_dtype(width)
+    q = jnp.zeros((B, C, K, G, hd), jnp.float32)
+    kn = jnp.zeros((B, C, K, hd), jnp.float32)
+    kv = jnp.zeros((B, W, K, hd), dt)
+    pos = jnp.zeros((B, W), jnp.int32)
+    p0 = jnp.full((B,), W, jnp.int32)
+    nv = jnp.full((B,), C, jnp.int32)
+    e = jnp.zeros((B,), jnp.float32)
+    reps = max(1, int(_AUTOTUNE["reps"]))
+    best, best_t = None, float("inf")
+    cands = [c for c in _ATTN_CANDIDATES
+             if c <= round_up(W, 128) and _prefill_fits(c, C, G, hd, width)]
+    for bw in cands:
+        fn = lambda: flash_prefill(q, kn, kn, kv, kv, pos, p0, nv, e, e,
+                                   width=width, scale=1.0, block_w=bw,
+                                   interpret=False)
+        try:
+            jax.block_until_ready(fn())  # compile
+        except Exception:  # tiling rejected by the compiler — skip
+            continue
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        t = time.perf_counter() - t0
+        if t < best_t:
+            best, best_t = (bw,), t
+    return best
+
+
+def prefill_blocks_for(W: int, C: int, G: int, hd: int, *, width=None,
+                       interpret: bool) -> int:
+    """History split size (``block_w``) for the flash-prefill kernel.
+
+    Interpret mode returns the whole window — one grid step on exact
+    full-shape blocks, the bit-equality contract against
+    ``attn/ref.chunk_attend``.  Compiled buckets key on
+    ``("prefill", C, G, hd, width)`` — W is deliberately not part of the
+    key (see ``_PREFILL_MEASURE_W``) — and come from the same persisted
+    measured cache as the decode splits; heuristic fallback
+    ``min(512, Ŵ→128)``.
+    """
+    if interpret:
+        return W
+    key = ("prefill", C, G, hd, width or 0)
+    blocks = _BLOCK_CACHE.get(key)
+    if blocks is None:
+        measured = (_measure_prefill(C, G, hd, width)
+                    if _AUTOTUNE["measure"] else None)
+        blocks = measured or (min(512, round_up(W, 128)),)
+        _BLOCK_CACHE[key] = blocks
+        if measured:
+            _MEASURED.add(key)
+            save_autotune()
+    return blocks[0]
+
+
+# ---------------------------------------------------------------------------
 # differentiable fused matmul
 # ---------------------------------------------------------------------------
 
@@ -449,7 +537,8 @@ def tape_dot(x, w, e_w, *, width: int, transpose_b: bool = False,
 
 
 __all__ = ["fused_dot", "tape_dot", "blocks_for", "attn_blocks_for",
-           "autotune_cache", "reset_autotune", "set_autotune",
-           "save_autotune", "load_autotune", "default_interpret"]
+           "prefill_blocks_for", "autotune_cache", "reset_autotune",
+           "set_autotune", "save_autotune", "load_autotune",
+           "default_interpret"]
 
 load_autotune()   # persisted measurements survive process restarts

@@ -1,13 +1,16 @@
 """Serving CLI over the ``repro.serve`` continuous-batching engine.
 
 Mixed-length prompts, per-request budgets, greedy/temperature/top-k
-sampling, an optionally DFXP-packed KV-cache pool, and the fused
+sampling, an optionally DFXP-packed KV-cache pool, the fused
 flash-decode attention kernel (``--fused-decode``: dequantize in the
-attention tile loads, no per-layer f32 K/V materialization):
+attention tile loads, no per-layer f32 K/V materialization), and
+chunked prefill (``--prefill-chunk C``: immediate admission, one
+C-token chunk per engine step interleaved with decode, one prefill jit
+for any prompt length):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
       --num-requests 4 --prompt-len 8,16,32 --max-new 16 --cache-bits 8 \
-      --fused-decode
+      --fused-decode --prefill-chunk 8
 
 ``Engine`` below is the *lockstep reference*: batched prefill, then every
 sequence decodes the same number of steps at one shared position. It frees
@@ -93,6 +96,14 @@ def main(argv=None):
                          "flash-decode kernel directly on the KV pool's "
                          "storage (packed pools dequantize int mantissas "
                          "in the tile loads; no f32 K/V materialization)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: admit any request into any free "
+                         "slot immediately and prefill C tokens per engine "
+                         "step interleaved with decode (one jit for any "
+                         "prompt length; chunk K/V quantized straight into "
+                         "the packed pool). 0 = whole-prompt prefill (the "
+                         "bit-for-bit reference). Attention-family archs "
+                         "only; MoE/SSM stay on the whole-prompt path")
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -101,7 +112,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode)
+    policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode,
+                             prefill_chunk=args.prefill_chunk)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     lens = _parse_lens(args.prompt_len)
     slots = args.slots or min(args.num_requests, 4)

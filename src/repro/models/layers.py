@@ -276,15 +276,53 @@ class RawKVCodec:
         self.fused_decode = fused_decode
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
-               pos: Array) -> dict:
-        """``k_new``/``v_new``: [B, K, hd]; ``pos``: [B] int32."""
+               pos: Array, mask: Optional[Array] = None) -> dict:
+        """``k_new``/``v_new``: [B, K, hd]; ``pos``: [B] int32.
+
+        ``mask`` (bool [B], optional) suppresses the append for masked-off
+        rows entirely — the continuous-batching engine decodes all slots
+        every step, and rows mid-chunked-prefill (or free) must not have
+        garbage written into their ring.  ``mask=None`` keeps today's
+        unconditional write, bit-for-bit.
+        """
         W = entry["k"].shape[1]
         slot = (pos % W).astype(jnp.int32)
         bidx = jnp.arange(pos.shape[0])
-        return {"k": entry["k"].at[bidx, slot].set(k_new),
-                "v": entry["v"].at[bidx, slot].set(v_new),
+        if mask is None:
+            return {"k": entry["k"].at[bidx, slot].set(k_new),
+                    "v": entry["v"].at[bidx, slot].set(v_new),
+                    "pos": entry["pos"].at[bidx, slot].set(
+                        pos.astype(jnp.int32))}
+        # masked rows write out of bounds and are dropped
+        slot = jnp.where(mask, slot, W)
+        return {"k": entry["k"].at[bidx, slot].set(k_new, mode="drop"),
+                "v": entry["v"].at[bidx, slot].set(v_new, mode="drop"),
                 "pos": entry["pos"].at[bidx, slot].set(
-                    pos.astype(jnp.int32))}
+                    pos.astype(jnp.int32), mode="drop")}
+
+    def append_chunk(self, entry: dict, k_new: Array, v_new: Array,
+                     p0: Array, n_valid: Array) -> dict:
+        """Write a prefill chunk's K/V into the ring, raw f32.
+
+        ``k_new``/``v_new``: [B, C, K, hd] — rows ``i`` land at absolute
+        positions ``p0 + i``; rows ``>= n_valid`` (ragged final chunk) and
+        rows the ring would evict within this same chunk (``C`` larger
+        than a windowed cap) are dropped.  ``p0 == 0`` marks the
+        admission chunk: the slot's stale ring positions reset to -1
+        first, so a recycled slot never leaks its previous occupant.
+        """
+        W = entry["k"].shape[1]
+        C = k_new.shape[1]
+        idx = jnp.arange(C, dtype=jnp.int32)
+        pos = p0[:, None] + idx[None, :]                          # [B, C]
+        keep = (idx[None, :] < n_valid[:, None]) & \
+            (pos >= p0[:, None] + n_valid[:, None] - W)
+        slot = jnp.where(keep, pos % W, W).astype(jnp.int32)
+        bidx = jnp.arange(pos.shape[0])[:, None]
+        pos_buf = jnp.where((p0 == 0)[:, None], -1, entry["pos"])
+        return {"k": entry["k"].at[bidx, slot].set(k_new, mode="drop"),
+                "v": entry["v"].at[bidx, slot].set(v_new, mode="drop"),
+                "pos": pos_buf.at[bidx, slot].set(pos, mode="drop")}
 
     def load(self, entry: dict):
         return entry["k"], entry["v"], entry["pos"]
@@ -301,13 +339,77 @@ class RawKVCodec:
                             width=None, scale=scale, window=window,
                             causal=causal)
 
+    def fused_prefill(self, entry: dict, qg: Array, k_new: Array,
+                      v_new: Array, p0: Array, n_valid: Array, *,
+                      scale: float, window=None, causal: bool = True):
+        """Flash-prefill on the raw f32 ring buffers (``width=None``).
+
+        ``qg``: [B, C, K, G, hd] chunk query groups; the chunk's own K/V
+        come from ``k_new``/``v_new`` (f32), history from the entry's
+        buffers.  Returns f32 [B, C, K, G, hd].
+        """
+        from repro.kernels.attn.ops import flash_prefill
+        return flash_prefill(qg, k_new, v_new, entry["k"], entry["v"],
+                             entry["pos"], p0, n_valid, width=None,
+                             scale=scale, window=window, causal=causal)
+
 
 RAW_KV_CODEC = RawKVCodec()
 
 
+def attention_prefill_chunk(params, spec: AttnSpec, x: Array,
+                            positions: Array, cache: dict, tape: QTape,
+                            prefix: str, *, n_valid: Array, window=None,
+                            codec=None):
+    """One chunked-prefill step: ``C`` prompt positions against the pool.
+
+    ``x``: [B, C, D] chunk activations at absolute positions ``positions``
+    [B, C] (``positions[:, 0]`` is the chunk start ``p0``; ``p0 == 0``
+    marks the admission chunk — see ``codec.append_chunk``).  ``n_valid``
+    [B] masks a ragged final chunk in-kernel; rows past it carry padding
+    whose outputs are garbage-by-contract.
+
+    The chunk queries attend the slot's already-written history (ring
+    entries ``0 <= pos < p0``) plus the chunk's **own** fresh K/V causally
+    — the latter straight from the f32 projections, never from the pool,
+    so a windowed ring cap smaller than the chunk can't evict in-window
+    keys before they are attended.  The attend runs *before* the write
+    (history is pre-chunk state); then ``codec.append_chunk`` quantizes
+    the chunk's K/V into the pool — in packed mode the values go straight
+    to int8/int16 mantissas, and with ``codec.fused_decode`` the attend is
+    the Pallas flash-prefill kernel reading those containers directly, so
+    f32 K/V never materializes in either direction.  Returns
+    ``(y, cache')``.
+    """
+    codec = codec or RAW_KV_CODEC
+    B, C, _ = x.shape
+    q, k_new, v_new = _qkv(params, spec, x, positions, tape, prefix)
+    H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    p0 = positions[:, 0]
+    qg = q.reshape(B, C, K, G, hd)
+    kf = k_new.astype(jnp.float32)
+    vf = v_new.astype(jnp.float32)
+    if getattr(codec, "fused_decode", False):
+        o = codec.fused_prefill(cache, qg, kf, vf, p0, n_valid, scale=scale,
+                                window=window, causal=spec.causal)
+    else:
+        from repro.kernels.attn import ref as AR
+        ck, cv, cpos = codec.load(cache)
+        o = AR.chunk_attend(qg.astype(jnp.float32), ck.astype(jnp.float32),
+                            cv.astype(jnp.float32), cpos, kf, vf, p0,
+                            n_valid, scale=scale, window=window,
+                            causal=spec.causal)
+    cache = codec.append_chunk(cache, kf, vf, p0, n_valid)
+    o = o.reshape(B, C, spec.q_dim).astype(x.dtype)
+    y = tape.dot(f"{prefix}/wo", o, params["wo"])
+    return tape.act(f"{prefix}/out", y), cache
+
+
 def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
                      cache: dict, tape: QTape, prefix: str, window=None,
-                     dist=None, codec=None):
+                     dist=None, codec=None, append_mask=None):
     """One-token decode. ``x``: [B, 1, D]; ``cache``: a codec-owned entry
     (default: ``{"k","v","pos"}`` float ring buffers ``[B, W, ...]``).
 
@@ -315,6 +417,9 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     token attends to itself), then attends over the whole buffer with a
     position-validity mask. ``pos`` may be a scalar or a per-sequence
     ``[B]``/``[B,1]`` vector — each slot decodes at its own position.
+    ``append_mask`` (bool [B], optional) drops the codec append for
+    masked-off rows — the chunked-prefill engine decodes all slots every
+    step, and rows still mid-prefill must not be written to.
     Returns ``(y, cache')``.
 
     When the codec advertises ``fused_decode``, the attention runs as the
@@ -339,7 +444,12 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
     else:
         positions = pos
     q, k_new, v_new = _qkv(params, spec, x, positions, tape, prefix)
-    cache = codec.append(cache, k_new[:, 0], v_new[:, 0], positions[:, 0])
+    if append_mask is None:
+        cache = codec.append(cache, k_new[:, 0], v_new[:, 0],
+                             positions[:, 0])
+    else:
+        cache = codec.append(cache, k_new[:, 0], v_new[:, 0],
+                             positions[:, 0], mask=append_mask)
     H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     G = H // K
     scale = 1.0 / math.sqrt(hd)

@@ -109,12 +109,13 @@ def ssm_forward(params, spec: SSMSpec, u: Array, tape: QTape, prefix: str,
     H, P, N, Q = spec.heads, spec.headdim, spec.state, spec.chunk
     S_orig = S
     if S % Q:
-        # pad to a chunk multiple; causality keeps real outputs unaffected
+        # pad to a chunk multiple; causality keeps real outputs unaffected,
+        # and the pad positions' dt is masked to zero below so the final
+        # chunk's state contribution (and hence the decode cache) is
+        # exactly the state after S_orig real tokens
         pad = Q - S % Q
         u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
         S = S + pad
-        if return_cache:
-            raise ValueError("prefill length must be a multiple of ssm chunk")
 
     zxbcdt = tape.dot(f"{prefix}/in_proj", u, params["in_proj"])
     z, x_raw, B_raw, C_raw, dt = _split_in_proj(spec, zxbcdt)
@@ -129,6 +130,13 @@ def ssm_forward(params, spec: SSMSpec, u: Array, tape: QTape, prefix: str,
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
     A = -jnp.exp(params["A_log"].astype(jnp.float32))                # [H]
+    if S != S_orig:
+        # ragged tail: a pad token must neither decay the state (a = 0 →
+        # exp(a) = 1) nor contribute to it (dt = 0 kills its x⊗B term);
+        # valid positions' outputs are untouched (cumsum is a prefix op
+        # and the intra-chunk mask is causal)
+        valid = (jnp.arange(S) < S_orig)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
     a = dt * A                                                       # [B,S,H]
 
     nc = S // Q
@@ -185,9 +193,14 @@ def ssm_forward(params, spec: SSMSpec, u: Array, tape: QTape, prefix: str,
     out = tape.act(f"{prefix}/out", out)
     if return_cache:
         K = spec.conv_kernel
+        need = K - 1
+        take = min(need, S_orig)   # the last *real* pre-conv inputs
+        lo = S_orig - take
         tail = jnp.concatenate(
-            [x_raw[:, S - (K - 1):], B_raw[:, S - (K - 1):],
-             C_raw[:, S - (K - 1):]], axis=-1)
+            [x_raw[:, lo:S_orig], B_raw[:, lo:S_orig],
+             C_raw[:, lo:S_orig]], axis=-1)
+        if take < need:            # very short prompt: fresh-state zeros
+            tail = jnp.pad(tail, ((0, 0), (need - take, 0), (0, 0)))
         return out, {"conv": tail, "state": h_last}
     return out, None
 

@@ -309,11 +309,17 @@ def _ring_cache(k: Array, v: Array, cap: int):
 
 def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
                  tape: QTape, dist: DistCtx, memory, mode: str,
-                 cache_in=None, max_cache_len: int = 0, kv_codec=None):
+                 cache_in=None, max_cache_len: int = 0, kv_codec=None,
+                 n_valid=None, append_mask=None):
     """Apply one sub-block (pre-norm residual). Returns (x, cache_out)."""
     h = L.rmsnorm(x, bp["norm"])
     cache_out = None
     window = blk.window if blk.window > 0 else None
+    if mode == "chunk" and blk.kind not in ("attn", "ffn"):
+        # chunked prefill is attention-family only: MoE capacity and SSM
+        # state couple a whole prompt (ServeEngine keeps those on the
+        # whole-prompt path), and xattn needs an encoder pass
+        raise ValueError(f"chunked prefill does not support {blk.kind!r}")
     if blk.kind in ("attn", "xattn"):
         spec = cfg.attn_spec
         if blk.rope_theta:
@@ -347,6 +353,10 @@ def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
                                             pfx, window=window)
             cap = min(window, max_cache_len) if window else max_cache_len
             cache_out = _ring_cache(k, v, cap)
+        elif mode == "chunk":
+            y, cache_out = L.attention_prefill_chunk(
+                bp, spec, h, positions, cache_in, tape, pfx,
+                n_valid=n_valid, window=window, codec=kv_codec)
         else:  # decode
             if blk.kind == "xattn":
                 y = _xattn_decode(bp, spec, h, cache_in, tape, pfx)
@@ -354,7 +364,8 @@ def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
             else:
                 y, cache_out = L.attention_decode(
                     bp, spec, h, positions, cache_in, tape, pfx,
-                    window=window, dist=dist, codec=kv_codec)
+                    window=window, dist=dist, codec=kv_codec,
+                    append_mask=append_mask)
     elif blk.kind == "ffn":
         if cfg.ffn_kind == "swiglu":
             y = L.swiglu(bp, h, tape, pfx)
@@ -400,7 +411,8 @@ def _xattn_decode(bp, spec, h, cache, tape, pfx):
 
 def _run_stage(cfg, policy, stage: Stage, sp, x, positions, scales, sinks,
                dist, memory, mode: str, cache=None, remat: str = "none",
-               max_cache_len: int = 0, kv_codec=None):
+               max_cache_len: int = 0, kv_codec=None, n_valid=None,
+               append_mask=None):
     """Scan one stage. Returns (x, stats, cache_out)."""
     stacked_names = _stage_group_names(cfg, stage, shared=False)
     shared_names = _stage_group_names(cfg, stage, shared=True)
@@ -422,7 +434,8 @@ def _run_stage(cfg, policy, stage: Stage, sp, x, positions, scales, sinks,
             x, co = _apply_block(cfg, blk, f"{stage.name}/{bkey}", bp, x,
                                  positions, tape, dist, memory, mode, ci,
                                  max_cache_len=max_cache_len,
-                                 kv_codec=kv_codec)
+                                 kv_codec=kv_codec, n_valid=n_valid,
+                                 append_mask=append_mask)
             if co is not None:
                 cache_out[bkey] = co
         return x, (tape.stats, cache_out)
@@ -524,13 +537,16 @@ def prefill(cfg: ModelConfig, policy, params, batch, scales, sinks,
 
 def decode_step(cfg: ModelConfig, policy, params, cache, tokens_or_embeds,
                 pos, scales, sinks, dist: DistCtx = DistCtx(),
-                kv_codec=None):
+                kv_codec=None, append_mask=None):
     """One decoding step. ``tokens_or_embeds``: [B] ids or [B,1,D] embeds;
     ``pos``: current position — a scalar int (lockstep decode) or a
     per-sequence ``[B]`` vector (continuous batching: every slot decodes
     at its own position). ``kv_codec``: optional KV-cache storage codec
     (see :class:`repro.models.layers.RawKVCodec`); the default is the
-    float ring buffer. Returns (logits [B,V], stats, cache')."""
+    float ring buffer. ``append_mask`` (bool [B], optional) drops the
+    cache append for masked-off rows — slots mid-chunked-prefill decode
+    garbage that must not be written. Returns (logits [B,V], stats,
+    cache')."""
     tape = QTape(policy, scales, sinks)
     stats: Dict[str, Array] = {}
     if cfg.input_mode == "tokens":
@@ -554,10 +570,65 @@ def decode_step(cfg: ModelConfig, policy, params, cache, tokens_or_embeds,
                                       params["stages"][stage.name], x,
                                       positions, scales, sinks, dist, memory,
                                       "decode", cache=cache[stage.name],
-                                      kv_codec=kv_codec)
+                                      kv_codec=kv_codec,
+                                      append_mask=append_mask)
         stats.update(st)
         new_cache[stage.name] = cache_out
 
+    x = L.rmsnorm(x, params["final_norm"])
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = L.lm_head(params["embed"], x, tape, tied=True)
+    else:
+        logits = L.lm_head(params["head"], x, tape, tied=False)
+    stats.update(tape.stats)
+    return logits[:, -1, :], stats, new_cache
+
+
+def prefill_chunk_step(cfg: ModelConfig, policy, params, cache, tokens,
+                       p0, n_valid, scales, sinks, dist: DistCtx = DistCtx(),
+                       kv_codec=None):
+    """One chunked-prefill step: ``C`` prompt positions against the cache.
+
+    ``tokens``: [B, C] ids — positions ``p0 + i`` of the prompt, rows
+    ``>= n_valid`` zero-padded (a ragged final chunk; masked in-kernel).
+    ``cache``: a decode cache/pool (attention ring entries only — chunked
+    prefill is attention-family only, see ``_apply_block``).  Each layer
+    attends the chunk against its already-written history plus the
+    chunk's own K/V causally, then writes the chunk K/V through
+    ``kv_codec`` (packed pools quantize on write; ``p0 == 0`` resets and
+    calibrates the slot).  Returns (last-valid-position logits [B, V],
+    stats, cache') — the logits sample the request's first token when the
+    chunk is final, exactly where whole-prompt ``prefill`` samples it.
+    """
+    if cfg.input_mode != "tokens":
+        raise ValueError("chunked prefill serves token-in models")
+    tape = QTape(policy, scales, sinks)
+    stats: Dict[str, Array] = {}
+    x = L.embed(params["embed"], tokens, tape)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    x = x.astype(jnp.dtype(policy.compute_dtype))
+    B, C = tokens.shape
+    p0 = jnp.asarray(p0, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    positions = p0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    new_cache = dict(cache)
+    for stage in build_stages(cfg):
+        if not stage.decoder:
+            continue
+        x, st, cache_out = _run_stage(cfg, policy, stage,
+                                      params["stages"][stage.name], x,
+                                      positions, scales, sinks, dist, None,
+                                      "chunk", cache=cache[stage.name],
+                                      kv_codec=kv_codec, n_valid=n_valid)
+        stats.update(st)
+        new_cache[stage.name] = cache_out
+
+    # only the last valid position's logits matter (first sampled token)
+    idx = jnp.clip(n_valid - 1, 0, C - 1)
+    x = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx[:, None, None], (B, 1, x.shape[-1])), axis=1)
     x = L.rmsnorm(x, params["final_norm"])
     if cfg.tie_embeddings and cfg.input_mode == "tokens":
         logits = L.lm_head(params["embed"], x, tape, tied=True)

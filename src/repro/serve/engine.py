@@ -14,18 +14,36 @@ Every device computation is fixed-shape and jitted once per shape:
   per-slot PRNG streams, one compile for the engine's lifetime.  Free
   slots decode garbage into their own cache rows; row independence means
   active slots are unaffected, and admission overwrites the row anyway.
-* ``_prefill`` compiles per ``(group_size, prompt_len)``: admission
-  groups queued requests of equal prompt length into one batch, so a
-  burst of same-length requests costs one prefill — and an engine admitting
-  B equal-length prompts into B free slots reproduces the lockstep
-  engine's prefill bit-for-bit (the equivalence test's anchor).
-  Variable-length prompts prefill as separate length groups, never
-  padded — padding would perturb MoE capacity routing and SSM state.
-  MoE models admit one request per prefill for the same reason: expert
-  capacity is computed over the whole prefill batch, and the engine
-  guarantees a request's tokens don't depend on who it shares with.
+* ``_prefill`` (whole-prompt mode, ``prefill_chunk=0``) compiles per
+  ``(group_size, prompt_len)``: admission groups queued requests of
+  equal prompt length into one batch, so a burst of same-length requests
+  costs one prefill — and an engine admitting B equal-length prompts
+  into B free slots reproduces the lockstep engine's prefill bit-for-bit
+  (the equivalence test's anchor).  Variable-length prompts prefill as
+  separate length groups, never padded — padding would perturb MoE
+  capacity routing and SSM state.  MoE models admit one request per
+  prefill for the same reason: expert capacity is computed over the
+  whole prefill batch, and the engine guarantees a request's tokens
+  don't depend on who it shares with.
 * ``_insert`` scatters the fresh cache entry into pool rows (axis 1) and,
   in packed mode, quantizes it first (``kv_pool.PackedKVCodec``).
+* ``_chunk`` (**chunked-prefill mode**, ``prefill_chunk=C > 0``,
+  attention-family models): any queued request is admitted into any free
+  slot immediately, and each engine step runs ONE fixed-size prefill
+  chunk for the oldest prefilling slot, interleaved with the decode
+  batch.  The chunk jit slices the slot out of the pool (traced slot
+  index, donated pool), runs ``transformer.prefill_chunk_step`` — the
+  chunk attends its slot's already-written history straight off the
+  packed storage (``codec.fused_prefill``, the flash-prefill kernel)
+  and writes its K/V back as int mantissas (``codec.append_chunk``,
+  quantize-on-write; no f32 K/V materializes in either direction) —
+  and scatters the slot back.  Compile count is ONE for the engine's
+  lifetime regardless of prompt lengths (ragged tails are masked
+  in-kernel), and TTFT no longer waits for a same-length partner.
+  While a slot is mid-prefill the decode batch's append is masked off
+  for it (``append_mask``), so its pool row and controller state stay
+  byte-identical to a solo run.  Whole-prompt mode remains the
+  bit-for-bit reference path.
 
 The KV pool stores K/V float32 (bit-identical to ``transformer.init_cache``)
 or as DFXP-packed int8/int16 mantissas with controller-managed per-slot
@@ -79,13 +97,20 @@ class ServeEngine:
         f32 K/V materialization on the hot path).
     sampler_cfg: greedy / temperature / top-k, per-request PRNG streams.
     cache_cfg: overrides the packed pool's controller settings.
+    prefill_chunk: chunk size ``C`` for chunked prefill (see module
+        docstring); ``None`` takes ``policy.prefill_chunk``, 0 keeps the
+        whole-prompt reference path.  Attention-family models only — MoE
+        keeps the solo whole-prompt carve-out (batch-coupled expert
+        capacity) and SSM/hybrid carry recurrent state across the
+        prompt; both silently stay on the whole-prompt path.
     """
 
     def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
                  *, max_slots: int, max_len: int, cache_bits: int = 0,
                  sampler_cfg: sampler.SamplerConfig = sampler.SamplerConfig(),
                  cache_cfg: Optional[kv_pool.CacheQuantConfig] = None,
-                 seed: int = 0, init_exp: float = -6.0):
+                 seed: int = 0, init_exp: float = -6.0,
+                 prefill_chunk: Optional[int] = None):
         if cfg.input_mode != "tokens" or cfg.encoder_layers:
             raise ValueError("ServeEngine serves token-in decoder models")
         if max_slots < 1:
@@ -130,12 +155,31 @@ class ServeEngine:
         self._ovf = np.zeros(3, np.float64)   # harvested at request finish
         self.metrics = metrics.ServeMetrics()
 
+        # chunked prefill: attention-family only (MoE capacity and SSM
+        # state couple a whole prompt; they keep the whole-prompt path)
+        pc = prefill_chunk if prefill_chunk is not None else \
+            int(getattr(policy, "prefill_chunk", 0))
+        chunkable = (cfg.family == "dense" and not cfg.num_experts
+                     and not cfg.encoder_layers)
+        self.prefill_chunk = pc if (pc and chunkable) else 0
+        self._pfill = np.zeros(B, np.int32)       # prefill frontier per slot
+        self._prefilling: collections.deque = collections.deque()  # slot FIFO
+
         # the pool argument is donated: decode/insert rewrite it in place
         # instead of holding two full copies live (the packed pool exists
         # to shrink cache HBM — doubling it back would defeat the point)
         self._prefill = jax.jit(self._prefill_impl)   # per (g, L) shape
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+        if self.prefill_chunk:
+            # ONE compile for any prompt length / slot: chunk shape is
+            # static, slot index / start / valid count are traced
+            self._chunk = jax.jit(self._chunk_impl, donate_argnums=(0,))
+            self._seed_keys = jax.jit(kv_pool.seed_slot_keys,
+                                      donate_argnums=(0,))
+            self._decode = jax.jit(self._decode_masked_impl,
+                                   donate_argnums=(0,))
+        else:
+            self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
         self._slot_tot = jax.jit(kv_pool.slot_totals)
         # MoE prefill routes with a capacity computed over the whole batch,
         # so batching prompts would couple their routing — admit one at a
@@ -164,6 +208,37 @@ class ServeEngine:
                              self.sampler_cfg)
         return nxt, pool
 
+    def _decode_masked_impl(self, pool, tok, pos, keys, mask):
+        # chunked mode: slots mid-prefill (or free) decode garbage whose
+        # cache append must be dropped — their pool rows and controller
+        # state must stay byte-identical to a solo run
+        logits, _, pool = T.decode_step(self.cfg, self.policy, self.params,
+                                        pool, tok, pos, self.exps,
+                                        self.sinks, kv_codec=self.codec,
+                                        append_mask=mask)
+        nxt = sampler.sample(logits, sampler.position_keys(keys, pos + 1),
+                             self.sampler_cfg)
+        return nxt, pool
+
+    def _chunk_impl(self, pool, tokens, slot, p0, n_valid, keys):
+        """One prefill chunk for one slot. ``tokens``: [1, C] (padded);
+        ``slot``/``p0``/``n_valid``: traced scalars; ``keys``: [1, 2]."""
+        sub = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), pool)
+        logits, _, sub = T.prefill_chunk_step(
+            self.cfg, self.policy, self.params, sub, tokens, p0[None],
+            n_valid[None], self.exps, self.sinks, kv_codec=self.codec)
+        pool = jax.tree_util.tree_map(
+            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                full, s, slot, axis=1), pool, sub)
+        # the first generated token sits at absolute position p0 + n_valid
+        # (== prompt length when this is the final chunk) — the same key
+        # fold as whole-prompt _prefill_impl
+        tok = sampler.sample(logits,
+                             sampler.position_keys(keys, (p0 + n_valid)[None]),
+                             self.sampler_cfg)
+        return tok, pool
+
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new: int = 16,
                eos_id: Optional[int] = None) -> int:
@@ -177,11 +252,9 @@ class ServeEngine:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new {max_new} exceeds "
                 f"max_len {self.max_len}")
-        if self.cfg.family in ("ssm", "hybrid") and \
-                prompt.size % self.cfg.ssm_chunk:
-            raise ValueError(     # ssm_forward's prefill contract
-                f"prompt_len {prompt.size} must be a multiple of "
-                f"ssm_chunk {self.cfg.ssm_chunk} for {self.cfg.family}")
+        # ssm/hybrid prompts need NOT align to ssm_chunk: ssm_forward pads
+        # the final chunk and masks the pad positions' dt, so the decode
+        # cache is exactly the state after the real tokens
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(Request(uid, prompt, max_new, eos_id))
@@ -236,14 +309,71 @@ class ServeEngine:
                 if self._maybe_finish(s, int(tok)):
                     free.append(s)
 
+    def _admit_chunked(self) -> None:
+        """Assign queued requests to free slots immediately (no grouping,
+        no prefill compute yet — chunks run one per engine step)."""
+        free = [s for s in range(self.max_slots) if self._reqs[s] is None]
+        while self._queue and free:
+            r = self._queue.popleft()
+            s = free.pop(0)
+            self._reqs[s] = r
+            self._pfill[s] = 0
+            self._pos[s] = 0
+            self._gen[s] = []
+            self._active[s] = False
+            key = sampler.request_key(self.seed, r.uid)
+            self._keys[s] = np.asarray(key)
+            if self._packed and self.cache_cfg.stochastic:
+                # seed the slot's cache PRNG chains before its first chunk
+                self._pool = self._seed_keys(self._pool, jnp.int32(s), key)
+            self._prefilling.append(s)
+            self.metrics.on_admit(r.uid)
+
+    def _step_prefill_chunk(self) -> None:
+        """Run ONE chunk for the oldest prefilling slot (FIFO)."""
+        if not self._prefilling:
+            return
+        s = self._prefilling[0]
+        r = self._reqs[s]
+        f = int(self._pfill[s])
+        C = self.prefill_chunk
+        n = min(C, r.tokens.size - f)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = r.tokens[f:f + n]
+        first, self._pool = self._chunk(
+            self._pool, jnp.asarray(toks), jnp.int32(s), jnp.int32(f),
+            jnp.int32(n), jnp.asarray(self._keys[s:s + 1]))
+        self._pfill[s] = f + n
+        self._pos[s] = f + n          # frontier (RoPE-safe while masked)
+        self.metrics.on_prefill_chunk(r.uid)
+        if f + n == r.tokens.size:    # final chunk: first token sampled
+            self._prefilling.popleft()
+            tok = int(np.asarray(first)[0])
+            self.metrics.on_token(r.uid)
+            self._gen[s] = [tok]
+            self._tok[s] = tok
+            self._active[s] = True
+            self._maybe_finish(s, tok)
+
     def step(self) -> None:
-        """Admit what fits, then decode one token on every active slot."""
-        self._admit()
+        """Admit what fits, run one prefill chunk (chunked mode), then
+        decode one token on every active slot."""
+        if self.prefill_chunk:
+            self._admit_chunked()
+            self._step_prefill_chunk()
+        else:
+            self._admit()
         if not self._active.any():
             return
-        nxt, self._pool = self._decode(self._pool, jnp.asarray(self._tok),
-                                       jnp.asarray(self._pos),
-                                       jnp.asarray(self._keys))
+        if self.prefill_chunk:
+            nxt, self._pool = self._decode(
+                self._pool, jnp.asarray(self._tok), jnp.asarray(self._pos),
+                jnp.asarray(self._keys), jnp.asarray(self._active))
+        else:
+            nxt, self._pool = self._decode(self._pool,
+                                           jnp.asarray(self._tok),
+                                           jnp.asarray(self._pos),
+                                           jnp.asarray(self._keys))
         nxt = np.asarray(nxt)
         self.metrics.on_decode_step()
         for s in np.where(self._active)[0]:
@@ -256,12 +386,19 @@ class ServeEngine:
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Drive until the queue drains; returns ``{uid: generated ids}``."""
-        budget = max_steps if max_steps is not None else (
-            sum(t.max_new for t in list(self._queue))
-            + sum(r.max_new for r in self._reqs if r is not None)
-            + len(self._queue) + self.max_slots + 4)
+        if max_steps is not None:
+            budget = max_steps
+        else:
+            pending = list(self._queue) + [r for r in self._reqs
+                                           if r is not None]
+            chunks = 0
+            if self.prefill_chunk:
+                chunks = sum(-(-r.tokens.size // self.prefill_chunk)
+                             for r in pending)
+            budget = (sum(r.max_new for r in pending) + chunks
+                      + len(self._queue) + self.max_slots + 4)
         steps = 0
-        while self._queue or self._active.any():
+        while self._queue or self._prefilling or self._active.any():
             if steps >= budget:
                 raise RuntimeError(f"engine did not drain in {budget} steps")
             self.step()

@@ -32,7 +32,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed import container_dtype, pack, pack_rows, qrange
+import math
+
+from repro.core.packed import (_overflow_counts, container_dtype, pack,
+                               pack_rows, qrange)
 from repro.core.quant import exact_pow2
 from repro.core.scale import ScaleState, calibrate_exp, controller_step
 from repro.models import transformer as T
@@ -70,6 +73,36 @@ def _rescale(m: Array, de: Array, width: int) -> Array:
     f = exact_pow2(-de).reshape(de.shape + (1,) * (m.ndim - de.ndim))
     mf = jnp.round(m.astype(jnp.float32) * f)
     return jnp.clip(mf, qmin, qmax).astype(m.dtype)
+
+
+def _pack_chunk(x: Array, width: int, e: Array, keep: Array, key=None,
+                det=None):
+    """Quantize a chunk ``[B, C, ...]`` against per-row exponents ``e[B]``.
+
+    ``keep`` [B, C] marks the rows that will actually be written; overflow
+    statistics count those rows only.  ``key`` [B, 2] enables stochastic
+    rounding with one draw stream per slot; ``det`` [B] forces
+    deterministic rounding per row (the admission chunk, matching
+    ``pack_entry``).  Returns ``(mantissa int[B, C, ...], stats f32[B, 3])``.
+    """
+    qmax, qmin = qrange(width)
+    e = jnp.asarray(e, jnp.float32)
+    step = exact_pow2(e).reshape(e.shape + (1,) * (x.ndim - 1))
+    m = x.astype(jnp.float32) / step
+    if key is not None:
+        u = jax.vmap(lambda k: jax.random.uniform(k, m.shape[1:]))(key)
+        m = jnp.where(det.reshape((-1,) + (1,) * (x.ndim - 1)),
+                      jnp.round(m), jnp.floor(m + u))
+    else:
+        m = jnp.round(m)
+    kexp = keep.reshape(keep.shape + (1,) * (x.ndim - 2))
+    axes = tuple(range(1, x.ndim))
+    ovf, ovfh = _overflow_counts(m, width, axes=axes, mask=kexp)
+    row_sz = float(math.prod(x.shape[2:]))
+    total = jnp.sum(keep, axis=1).astype(jnp.float32) * row_sz
+    stats = jnp.stack([ovf, ovfh, total], axis=-1)
+    m = jnp.clip(m, qmin, qmax).astype(container_dtype(width))
+    return m, stats
 
 
 class PackedKVCodec:
@@ -117,7 +150,17 @@ class PackedKVCodec:
                             causal=causal)
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
-               pos: Array) -> dict:
+               pos: Array, mask: Optional[Array] = None) -> dict:
+        """Append one token's K/V per slot (quantize, count, control).
+
+        ``mask`` (bool [B], optional) suppresses the append for masked-off
+        rows *completely* — no mantissa/pos write, no statistics, no
+        counter advance, no controller application, no PRNG-chain move.
+        The continuous-batching engine decodes every slot each step; rows
+        mid-chunked-prefill must stay byte-identical to a solo run, and a
+        garbage append would move their exponents.  ``mask=None`` keeps
+        today's unconditional path, bit-for-bit.
+        """
         cfg = self.cfg
         W = entry["k_m"].shape[1]
         slot = (pos % W).astype(jnp.int32)
@@ -127,23 +170,40 @@ class PackedKVCodec:
         key_k = key_v = None
         if cfg.stochastic:
             ks = jax.vmap(lambda k: jax.random.split(k, 3))(entry["key"])
-            key_k, key_v, out["key"] = ks[:, 0], ks[:, 1], ks[:, 2]
+            key_k, key_v = ks[:, 0], ks[:, 1]
+            out["key"] = (ks[:, 2] if mask is None else
+                          jnp.where(mask[:, None], ks[:, 2], entry["key"]))
 
         k_m, st_k = pack_rows(k_new, cfg.width, entry["k_e"],
                               stochastic_keys=key_k)
         v_m, st_v = pack_rows(v_new, cfg.width, entry["v_e"],
                               stochastic_keys=key_v)
-        k_buf = entry["k_m"].at[bidx, slot].set(k_m)
-        v_buf = entry["v_m"].at[bidx, slot].set(v_m)
-        out["pos"] = entry["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        if mask is None:
+            k_buf = entry["k_m"].at[bidx, slot].set(k_m)
+            v_buf = entry["v_m"].at[bidx, slot].set(v_m)
+            out["pos"] = entry["pos"].at[bidx, slot].set(
+                pos.astype(jnp.int32))
+            napp = 1.0
+        else:
+            mf = mask.astype(jnp.float32)
+            st_k = st_k * mf[:, None]
+            st_v = st_v * mf[:, None]
+            wslot = jnp.where(mask, slot, W)   # OOB rows dropped
+            k_buf = entry["k_m"].at[bidx, wslot].set(k_m, mode="drop")
+            v_buf = entry["v_m"].at[bidx, wslot].set(v_m, mode="drop")
+            out["pos"] = entry["pos"].at[bidx, wslot].set(
+                pos.astype(jnp.int32), mode="drop")
+            napp = mf
         acc_k = entry["acc_k"] + st_k
         acc_v = entry["acc_v"] + st_v
         out["tot_k"] = entry["tot_k"] + st_k
         out["tot_v"] = entry["tot_v"] + st_v
-        out["n_app"] = entry["n_app"] + 1.0
+        out["n_app"] = entry["n_app"] + napp
 
         # §5 controller, per slot, every update_interval appends.
         apply = jnp.mod(out["n_app"], float(cfg.update_interval)) == 0.0
+        if mask is not None:
+            apply = apply & mask
         st = controller_step(
             ScaleState(exps={"k": entry["k_e"], "v": entry["v_e"]},
                        acc={"k": acc_k, "v": acc_v}),
@@ -161,6 +221,101 @@ class PackedKVCodec:
                        _rescale(a[1], de_v, cfg.width)),
             lambda a: a, (k_buf, v_buf))
         return out
+
+    def append_chunk(self, entry: dict, k_new: Array, v_new: Array,
+                     p0: Array, n_valid: Array) -> dict:
+        """Quantize-on-write for one prefill chunk (positions ``p0+i``).
+
+        The chunk's fresh f32 K/V ``[B, C, K, hd]`` is packed straight to
+        int mantissas against the slot's exponents — the pool never holds
+        f32.  ``p0 == 0`` marks the **admission** chunk, which behaves
+        like :meth:`pack_entry` for its slot: stale ring positions reset
+        to -1, exponents calibrate from this chunk's max-magnitude (with
+        the margin bit), statistics and the append counter reset, and the
+        chunk's own quantization is not counted as appends.  Later chunks
+        count their valid rows as appends and run the §5 controller on
+        every ``update_interval`` crossing, rescaling stored mantissas in
+        place when an exponent moves — exactly the per-token
+        :meth:`append` discipline, batched.  Rows ``>= n_valid`` (ragged
+        final chunk) and rows evicted within the same chunk (``C`` larger
+        than a windowed cap) are dropped from both writes and statistics.
+        """
+        cfg = self.cfg
+        W = entry["k_m"].shape[1]
+        B, C = k_new.shape[:2]
+        idx = jnp.arange(C, dtype=jnp.int32)
+        pos = p0[:, None] + idx[None, :]                         # [B, C]
+        keep = (idx[None, :] < n_valid[:, None]) & \
+            (pos >= p0[:, None] + n_valid[:, None] - W)
+        first = p0 == 0                                          # [B]
+
+        def _cal(x):
+            ax = jnp.max(jnp.abs(x.astype(jnp.float32))
+                         * keep[..., None, None], axis=(1, 2, 3))
+            return calibrate_exp(ax, cfg.width, cfg.margin_bits)
+
+        k_e = jnp.where(first, _cal(k_new), entry["k_e"])
+        v_e = jnp.where(first, _cal(v_new), entry["v_e"])
+
+        out = dict(entry)
+        key_k = key_v = det = None
+        if cfg.stochastic:
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(entry["key"])
+            key_k, key_v, out["key"] = ks[:, 0], ks[:, 1], ks[:, 2]
+            det = first    # admission rounds deterministically (pack_entry)
+        k_m, st_k = _pack_chunk(k_new, cfg.width, k_e, keep, key_k, det)
+        v_m, st_v = _pack_chunk(v_new, cfg.width, v_e, keep, key_v, det)
+        slot = jnp.where(keep, pos % W, W).astype(jnp.int32)
+        bidx = jnp.arange(B)[:, None]
+        k_buf = entry["k_m"].at[bidx, slot].set(k_m, mode="drop")
+        v_buf = entry["v_m"].at[bidx, slot].set(v_m, mode="drop")
+        pos_buf = jnp.where(first[:, None], -1, entry["pos"])
+        out["pos"] = pos_buf.at[bidx, slot].set(pos.astype(jnp.int32),
+                                                mode="drop")
+
+        zero3 = jnp.zeros((B, 3), jnp.float32)
+        f1 = first[:, None]
+        acc_k = jnp.where(f1, zero3, entry["acc_k"] + st_k)
+        acc_v = jnp.where(f1, zero3, entry["acc_v"] + st_v)
+        out["tot_k"] = jnp.where(f1, zero3, entry["tot_k"] + st_k)
+        out["tot_v"] = jnp.where(f1, zero3, entry["tot_v"] + st_v)
+        cnt = jnp.sum(keep, axis=1).astype(jnp.float32)
+        n_prev = jnp.where(first, 0.0, entry["n_app"])
+        n_new = jnp.where(first, 0.0, entry["n_app"] + cnt)
+        out["n_app"] = n_new
+
+        interval = float(cfg.update_interval)
+        apply = jnp.floor(n_new / interval) > jnp.floor(n_prev / interval)
+        st = controller_step(
+            ScaleState(exps={"k": k_e, "v": v_e},
+                       acc={"k": acc_k, "v": acc_v}),
+            max_overflow_rate=cfg.max_overflow_rate, apply=apply)
+        out["k_e"], out["v_e"] = st.exps["k"], st.exps["v"]
+        out["acc_k"], out["acc_v"] = st.acc["k"], st.acc["v"]
+        de_k = out["k_e"] - k_e
+        de_v = out["v_e"] - v_e
+        out["k_m"], out["v_m"] = jax.lax.cond(
+            jnp.any(de_k != 0.0) | jnp.any(de_v != 0.0),
+            lambda a: (_rescale(a[0], de_k, cfg.width),
+                       _rescale(a[1], de_v, cfg.width)),
+            lambda a: a, (k_buf, v_buf))
+        return out
+
+    def fused_prefill(self, entry: dict, qg: Array, k_new: Array,
+                      v_new: Array, p0: Array, n_valid: Array, *,
+                      scale: float, window=None, causal: bool = True):
+        """Flash-prefill directly on the packed mantissas (no ``load``).
+
+        ``qg``: [B, C, K, G, hd] chunk query groups; the kernel
+        dequantizes int8/int16 history tiles in-register against the
+        per-slot exponents and attends the chunk's own ``k_new``/``v_new``
+        from f32.  Returns f32 [B, C, K, G, hd].
+        """
+        from repro.kernels.attn.ops import flash_prefill
+        return flash_prefill(qg, k_new, v_new, entry["k_m"], entry["v_m"],
+                             entry["pos"], p0, n_valid, entry["k_e"],
+                             entry["v_e"], width=self.cfg.width, scale=scale,
+                             window=window, causal=causal)
 
     # -- pool management (full [n, B, ...] shapes, outside the scan) ------
     def init_like(self, raw: dict) -> dict:
@@ -257,6 +412,31 @@ def insert(pool: dict, raw_entry: dict, slots: Array,
                 src = codec.pack_entry(src, slot_keys)
             new_sc[bkey] = jax.tree_util.tree_map(
                 lambda dst, s: dst.at[:, slots].set(s), pe, src)
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def seed_slot_keys(pool: dict, slot, key: Array) -> dict:
+    """Seed one slot's stochastic-rounding chains before chunked admission.
+
+    Mirrors :meth:`PackedKVCodec.pack_entry`'s derivation — a
+    domain-tagged per-request root folded by layer index — so a request's
+    cache stream is the same whichever admission path seeds it.
+    ``slot`` may be traced (jit-safe); no-op for pools without ``key``
+    fields (deterministic rounding).
+    """
+    root = jax.random.fold_in(key, 2 ** 31 - 1)
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            if isinstance(e, dict) and "key" in e:
+                n = e["key"].shape[0]
+                layer_keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                    root, jnp.arange(n))
+                e = dict(e)
+                e["key"] = e["key"].at[:, slot].set(layer_keys)
+            new_sc[bkey] = e
         new_pool[sname] = new_sc
     return new_pool
 

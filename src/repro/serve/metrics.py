@@ -26,6 +26,7 @@ class RequestTrace:
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
     new_tokens: int = 0
+    prefill_chunks: int = 0
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -60,6 +61,16 @@ class ServeMetrics:
         if tr.t_first is None:
             tr.t_first = _now()
 
+    def on_prefill_chunk(self, uid: int) -> None:
+        """Chunked-prefill mode: one chunk of this request's prompt ran.
+
+        TTFT semantics are unchanged — the first token still stamps
+        ``t_first`` via :meth:`on_token` when the *final* chunk's logits
+        are sampled — but the chunk count makes a long prompt's TTFT
+        interpretable (chunks × step time, interleaved with decode).
+        """
+        self.traces[uid].prefill_chunks += 1
+
     def on_finish(self, uid: int) -> None:
         self.traces[uid].t_finish = self.t_end = _now()
 
@@ -86,6 +97,8 @@ class ServeMetrics:
             "ttft_max_s": max(ttfts) if ttfts else 0.0,
             "queue_wait_mean_s": sum(waits) / len(waits) if waits else 0.0,
             "queue_wait_max_s": max(waits) if waits else 0.0,
+            "prefill_chunks": sum(t.prefill_chunks
+                                  for t in self.traces.values()),
         }
         if extra:
             out.update(extra)

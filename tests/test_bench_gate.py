@@ -1,0 +1,93 @@
+"""benchmarks.check_regression: the CI bench-gate comparison logic."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import compare, main, merge_min
+
+
+def _payload(rows, tiny=True):
+    return {"meta": {"backend": "cpu", "tiny": tiny},
+            "rows": [{"name": n, "us_per_call": us, "derived": 1.0}
+                     for n, us in rows]}
+
+
+BASE = _payload([("a_jnp", 100.0), ("a_fused", 120.0),
+                 ("b_jnp", 50.0), ("b_fused", 60.0), ("c", 400.0)])
+
+
+def test_identical_runs_pass():
+    assert compare(BASE, BASE) == []
+
+
+def test_uniform_machine_slowdown_passes():
+    """A 3x slower CI machine shifts every row; the median normalization
+    must cancel it completely."""
+    fresh = _payload([(r["name"], r["us_per_call"] * 3.0)
+                      for r in BASE["rows"]])
+    assert compare(BASE, fresh) == []
+
+
+def test_single_row_regression_fails():
+    rows = [(r["name"], r["us_per_call"]) for r in BASE["rows"]]
+    rows[1] = ("a_fused", 120.0 * 1.6)          # one row 60% slower
+    problems = compare(BASE, _payload(rows))
+    assert len(problems) == 1 and "a_fused" in problems[0]
+    # and it sits inside the tolerance band when the band is widened
+    assert compare(BASE, _payload(rows), tolerance=0.8) == []
+
+
+def test_missing_row_fails_even_when_fast():
+    fresh = _payload([(r["name"], r["us_per_call"])
+                      for r in BASE["rows"][:-1]])
+    problems = compare(BASE, fresh)
+    assert problems == ["missing row: c"]
+
+
+def test_extra_fresh_rows_are_fine():
+    fresh = _payload([(r["name"], r["us_per_call"])
+                      for r in BASE["rows"]] + [("new_pair", 10.0)])
+    assert compare(BASE, fresh) == []
+
+
+def test_shape_mismatch_refuses_to_compare():
+    fresh = _payload([(r["name"], r["us_per_call"])
+                      for r in BASE["rows"]], tiny=False)
+    problems = compare(BASE, fresh)
+    assert any("shape mismatch" in p for p in problems)
+
+
+def test_empty_baseline_fails():
+    assert compare(_payload([]), BASE) == ["committed baseline has no rows"]
+
+
+def test_merge_min_takes_per_row_floor(tmp_path):
+    """A one-run throttle spike on a single row disappears in the merge
+    (the retry path's defense); a real regression present in both runs
+    survives."""
+    spiky = _payload([("a_jnp", 100.0), ("a_fused", 120.0 * 3.0),
+                      ("b_jnp", 50.0), ("b_fused", 60.0),
+                      ("c", 400.0 * 2.0)])
+    real = _payload([("a_jnp", 100.0), ("a_fused", 120.0),
+                     ("b_jnp", 50.0), ("b_fused", 60.0),
+                     ("c", 400.0 * 2.0)])       # c slow in BOTH runs
+    p1, p2 = tmp_path / "r1.json", tmp_path / "r2.json"
+    p1.write_text(json.dumps(spiky))
+    p2.write_text(json.dumps(real))
+    merged = merge_min([str(p1), str(p2)])
+    assert compare(BASE, merged) != []          # c's regression survives
+    vals = {r["name"]: r["us_per_call"] for r in merged["rows"]}
+    assert vals["a_fused"] == 120.0             # spike cancelled
+    assert vals["c"] == 800.0
+
+
+@pytest.mark.parametrize("regress", [False, True])
+def test_cli_exit_codes(tmp_path, regress):
+    cpath, fpath = tmp_path / "c.json", tmp_path / "f.json"
+    rows = [(r["name"], r["us_per_call"] * (2.0 if regress and
+                                            r["name"] == "c" else 1.0))
+            for r in BASE["rows"]]
+    cpath.write_text(json.dumps(BASE))
+    fpath.write_text(json.dumps(_payload(rows)))
+    rc = main(["--committed", str(cpath), "--fresh", str(fpath)])
+    assert rc == (1 if regress else 0)
