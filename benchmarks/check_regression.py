@@ -50,9 +50,19 @@ from typing import List
 
 
 def compare(committed: dict, fresh: dict, tolerance: float = 0.25,
-            metric: str = "us_per_call") -> List[str]:
-    """Return the list of gate violations (empty = pass)."""
+            metric: str = "us_per_call",
+            mem_tolerance: float = 0.25) -> List[str]:
+    """Return the list of gate violations (empty = pass).
+
+    Rows tagged ``"kind": "mem"`` hold pool HBM **bytes** per request —
+    deterministic at fixed shapes, so they are diffed as direct
+    ``fresh/committed`` ratios against ``mem_tolerance`` and excluded
+    from the time rows' median normalization (a byte count's ~1.0 ratio
+    would drag the median away from the timing noise it must cancel).
+    """
     problems: List[str] = []
+    kinds = {r["name"]: r.get("kind", "time")
+             for r in committed.get("rows", [])}
     base = {r["name"]: float(r[metric]) for r in committed.get("rows", [])}
     new = {r["name"]: float(r[metric]) for r in fresh.get("rows", [])}
     if not base:
@@ -71,7 +81,18 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.25,
             f"tiny={f_tiny} — re-record the baseline at CI shapes")
         return problems
 
-    shared = [n for n in base if n in new and base[n] > 0]
+    for n in sorted(base):
+        if kinds[n] != "mem" or n not in new or base[n] <= 0:
+            continue
+        ratio = new[n] / base[n]
+        if ratio > 1.0 + mem_tolerance:
+            problems.append(
+                f"memory regression: {n} is {ratio:.2f}x the committed "
+                f"bytes/request (committed {base[n]:.0f}B -> fresh "
+                f"{new[n]:.0f}B, tolerance {1.0 + mem_tolerance:.2f}x)")
+
+    shared = [n for n in base
+              if n in new and base[n] > 0 and kinds[n] != "mem"]
     if not shared:
         return problems
     ratios = {n: new[n] / base[n] for n in shared}
@@ -117,6 +138,10 @@ def main(argv=None) -> int:
                          "are min-merged per row before comparing")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed median-normalized slowdown per row")
+    ap.add_argument("--mem-tolerance", type=float, default=0.25,
+                    help="allowed direct-ratio growth for kind=mem rows "
+                         "(pool bytes/request; deterministic at fixed "
+                         "shapes, no median normalization)")
     ap.add_argument("--merge-out",
                     help="write the min-merge of --fresh here and exit 0 "
                          "(baseline (re-)recording helper; no gating)")
@@ -132,7 +157,8 @@ def main(argv=None) -> int:
     with open(args.committed) as f:
         committed = json.load(f)
     fresh = merge_min(args.fresh)
-    problems = compare(committed, fresh, tolerance=args.tolerance)
+    problems = compare(committed, fresh, tolerance=args.tolerance,
+                       mem_tolerance=args.mem_tolerance)
     if problems:
         for p in problems:
             print(f"BENCH GATE: {p}", file=sys.stderr)

@@ -61,6 +61,8 @@ def main() -> None:
                 raise RuntimeError(f"suite {name!r} emitted no rows")
             for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]:.4f}", flush=True)
+            # rows may carry a 4th "kind" field ("time" default; "mem"
+            # rows are byte counts the gate diffs as direct ratios)
         except Exception as e:  # keep the suite running
             print(f"{name}/ERROR,0,0  # {e}", file=sys.stderr)
             raise
@@ -70,8 +72,10 @@ def main() -> None:
             payload = {
                 "meta": {"backend": jax.default_backend(),
                          "suite": name, "tiny": args.tiny},
-                "rows": [{"name": n, "us_per_call": round(us, 1),
-                          "derived": d} for n, us, d in rows],
+                "rows": [{"name": r[0], "us_per_call": round(r[1], 1),
+                          "derived": r[2],
+                          "kind": r[3] if len(r) > 3 else "time"}
+                         for r in rows],
             }
             with open(out_path, "w") as f:
                 json.dump(payload, f, indent=1)

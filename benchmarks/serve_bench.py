@@ -3,7 +3,13 @@ fused vs unfused decode attention, whole-prompt vs chunked prefill.
 
 Rows follow the repo convention ``(name, us_per_call, derived)`` where
 ``us_per_call`` is microseconds per generated token and ``derived`` is the
-aggregate tok/s. Four comparisons matter:
+aggregate tok/s.  The ``serve_mem_*`` rows carry a fourth ``"mem"`` kind
+field: their value column is **pool HBM bytes per request** (slot-major:
+the full ``max_len`` reservation one slot holds; paged: page size × the
+wave's peak resident pages / requests) and ``derived`` is the whole
+arena in MB — deterministic at fixed shapes, so the regression gate
+diffs them as direct ratios instead of median-normalized times.  Four
+time comparisons matter:
 
 * ``serve_sequential_f32`` vs ``serve_batched_f32`` — the continuous-
   batching win: N requests through 1 slot vs N slots.
@@ -55,9 +61,10 @@ def _wave(eng, prompts, max_new):
 
 
 def _drive(cfg, params, prompts, max_new, *, slots, cache_bits, fused=False,
-           chunk=0, waves=1):
+           chunk=0, waves=1, page=0):
     eng = ServeEngine(cfg, PrecisionPolicy("float32", fused_decode=fused,
-                                           prefill_chunk=chunk),
+                                           prefill_chunk=chunk,
+                                           page_size=page),
                       params, max_slots=slots,
                       max_len=max(len(p) for p in prompts) + max_new,
                       cache_bits=cache_bits)
@@ -99,4 +106,39 @@ def run(tiny: bool = False):
                           cache_bits=bits, fused=fused, chunk=pc,
                           waves=3 if tiny else 1)
         rows.append((name, dt / toks * 1e6, toks / dt))
+    rows += _memory_rows(cfg, params, prompts, max_new, slots=slots,
+                         page=chunk)
+    return rows
+
+
+def _memory_rows(cfg, params, prompts, max_new, *, slots, page):
+    """Pool HBM bytes/request, paged-vs-slot, f32/int8 — the capacity
+    comparison the paged pool exists for.  Slot-major reserves the
+    worst-case ``max_len`` ring per slot up front; paged residency is
+    the wave's peak page count, measured by actually serving the wave
+    (page size == the chunk size the timed ``*_chunked`` rows use).
+    ``kind="mem"``: the CI gate diffs these rows as direct ratios."""
+    from repro.serve import paged as paged_mod
+
+    max_len = max(len(p) for p in prompts) + max_new
+    rows = []
+    for bits in (0, 8):
+        tag = "f32" if bits == 0 else f"int{bits}"
+        eng = ServeEngine(cfg, PrecisionPolicy("float32"), params,
+                          max_slots=slots, max_len=max_len,
+                          cache_bits=bits)
+        per_req = float(paged_mod.slot_nbytes(eng._pool))
+        rows.append((f"serve_mem_{tag}_slot", per_req,
+                     per_req * slots / 1e6, "mem"))
+        eng = ServeEngine(cfg, PrecisionPolicy("float32",
+                                               prefill_chunk=page,
+                                               page_size=page),
+                          params, max_slots=slots, max_len=max_len,
+                          cache_bits=bits)
+        _wave(eng, prompts, max_new)
+        st = eng.stats()
+        page_b = paged_mod.page_nbytes(eng._pool)
+        per_req = page_b * st["pages_in_use_peak"] / len(prompts)
+        rows.append((f"serve_mem_{tag}_paged", per_req,
+                     page_b * eng._alloc.n_pages / 1e6, "mem"))
     return rows

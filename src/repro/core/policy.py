@@ -75,10 +75,19 @@ class PrecisionPolicy:
     #   history attended off the packed storage (flash-prefill kernel
     #   when fused_decode). Attention-family models only; MoE/SSM keep
     #   the whole-prompt path. CLI --prefill-chunk.
+    page_size: int = 0               # serve-side: paged KV pool page size P.
+    #   0 = slot-major pool (contiguous [B, W] rings). P > 0: the pool
+    #   stores fixed-size pages with per-request block tables
+    #   (repro.serve.paged) — per-PAGE DFXP exponents, refcounted
+    #   prompt-prefix sharing with copy-on-write, page-granular
+    #   quantize-on-write. Forces chunked prefill (C defaults to P);
+    #   dense global-attention family only. CLI --page-size.
 
     def __post_init__(self):
         if self.prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0")
+        if self.page_size < 0:
+            raise ValueError("page_size must be >= 0")
         if self.arithmetic not in (*_FLOATS, "fixed", "dfxp", "observe"):
             raise ValueError(f"unknown arithmetic {self.arithmetic!r}")
         if self.storage not in ("sim", "packed"):

@@ -171,3 +171,135 @@ def flash_decode_call(q, k, v, pos, qpos, steps, *, width, block_w: int,
                         _VMEM((G, hd), jnp.float32)],  # numerator
         interpret=interpret,
     )(qpos, steps, q, k, v, pos)
+
+
+# -- paged variant: one extra block-table indirection ---------------------
+#
+# The paged pool (repro.serve.paged) stores K/V as [n_pages, P, K, hd]
+# arenas with per-PAGE exponents and maps logical token blocks through a
+# per-request block table bt [B, nblocks].  The split axis becomes the
+# page axis: split r of batch row b streams physical page bt[b, r] —
+# expressed as a scalar-prefetch index_map (PrefetchScalarGridSpec), so
+# the gather happens in the tile DMA, not as a host-side copy of the
+# arena.  No ragged-tail mask is needed (Wp = nblocks·P exactly); rows
+# the request never wrote — including every row of the null page 0 —
+# carry pos == -1 and mask out like empty ring slots.
+
+
+def _paged_split_kernel(bt_ref, qpos_ref, steps_ref, q_ref, k_ref, v_ref,
+                        pos_ref, o_ref, m_ref, l_ref, acc_ref, *, width,
+                        scale: float, window, causal: bool, nblocks: int,
+                        G: int, hd: int, P: int):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qf = q_ref[...].reshape(G, hd)
+    kf = _dequant(k_ref[...].reshape(P, hd), steps_ref[0, 0], width)
+    vf = _dequant(v_ref[...].reshape(P, hd), steps_ref[0, 1], width)
+    pos = pos_ref[...]                          # [1, P] logical positions
+    d = qpos_ref[0, 0] - pos
+    valid = pos >= 0
+    if causal:
+        valid = valid & (d >= 0)
+    if window:
+        valid = valid & (d < window)
+
+    s = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, -1e30)              # [G, P]
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, vf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(r == nblocks - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.reshape(1, 1, G, hd).astype(o_ref.dtype)
+
+
+def _paged_batched_kernel(bt_ref, qpos_ref, steps_ref, q_ref, k_ref, v_ref,
+                          pos_ref, o_ref, *, width, scale: float, window,
+                          causal: bool):
+    """One grid step, full shapes: the ref composite through the gather."""
+    bt = bt_ref[...]
+    kf = jnp.take(k_ref[...], bt, axis=0).astype(jnp.float32)
+    vf = jnp.take(v_ref[...], bt, axis=0).astype(jnp.float32)
+    if width is not None:
+        kf = kf * jnp.take(steps_ref[...][:, 0], bt)[..., None, None, None]
+        vf = vf * jnp.take(steps_ref[...][:, 1], bt)[..., None, None, None]
+    B, nblocks, P = kf.shape[:3]
+    shp = (B, nblocks * P) + kf.shape[3:]
+    o_ref[...] = R.attend(q_ref[...], kf.reshape(shp), vf.reshape(shp),
+                          pos_ref[...], qpos_ref[:, 0], scale=scale,
+                          window=window, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "scale", "window", "causal", "interpret", "force_split"))
+def flash_decode_paged_call(q, k, v, bt, pos, qpos, steps, *, width,
+                            scale: float, window, causal: bool,
+                            interpret: bool, force_split: bool = False):
+    """Blocked flash-decode through a per-request block table.
+
+    ``q``: f32 [B, K, G, hd] · ``k``/``v``: int8/int16/f32
+    [n_pages, P, K, hd] page arenas · ``bt``: int32 [B, nblocks] ·
+    ``pos``: int32 [B, nblocks·P] logical positions (-1 = empty) ·
+    ``qpos``: int32 [B, 1] · ``steps``: f32 [n_pages, 2] per-page dequant
+    steps.  Returns f32 [B, K, G, hd].  Interpret mode runs the
+    full-shape gather body (bit-identical to
+    ``ref.paged_decode_attention_ref``) unless ``force_split`` exercises
+    the scalar-prefetch split path (same math, split-order softmax).
+    """
+    B, K, G, hd = q.shape
+    P = k.shape[1]
+    nblocks = bt.shape[1]
+    out_shape = jax.ShapeDtypeStruct((B, K, G, hd), jnp.float32)
+
+    if interpret and not force_split:
+        return pl.pallas_call(
+            functools.partial(_paged_batched_kernel, width=width, scale=scale,
+                              window=window, causal=causal),
+            out_shape=out_shape,
+            interpret=True,
+        )(bt, qpos, steps, q, k, v, pos)
+    if pltpu is None:  # pragma: no cover — compiled TPU implies pltpu
+        raise RuntimeError(
+            "paged flash-decode needs jax.experimental.pallas.tpu for "
+            "scalar-prefetch block-table index maps")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                   # bt rides ahead of tiles
+        grid=(B, K, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, r, bt: (b, 0)),        # qpos
+            pl.BlockSpec((1, 2), lambda b, h, r, bt: (bt[b, r], 0)),  # steps
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, r, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, P, 1, hd),
+                         lambda b, h, r, bt: (bt[b, r], 0, h, 0)),   # k page
+            pl.BlockSpec((1, P, 1, hd),
+                         lambda b, h, r, bt: (bt[b, r], 0, h, 0)),   # v page
+            pl.BlockSpec((1, P), lambda b, h, r, bt: (b, r)),        # pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, r, bt: (b, h, 0, 0)),
+        scratch_shapes=[_VMEM((G, 1), jnp.float32),    # running max
+                        _VMEM((G, 1), jnp.float32),    # denominator
+                        _VMEM((G, hd), jnp.float32)],  # numerator
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_split_kernel, width=width, scale=scale,
+                          window=window, causal=causal, nblocks=nblocks,
+                          G=G, hd=hd, P=P),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bt, qpos, steps, q, k, v, pos)

@@ -23,8 +23,8 @@ from repro.core.quant import exact_pow2
 from repro.kernels import dispatch
 from repro.kernels._tiling import resolve_interpret
 
-from .attn_kernel import flash_decode_call
-from .prefill_kernel import flash_prefill_call
+from .attn_kernel import flash_decode_call, flash_decode_paged_call
+from .prefill_kernel import flash_prefill_call, flash_prefill_paged_call
 
 Array = jax.Array
 
@@ -109,3 +109,79 @@ def flash_prefill(q: Array, k_new: Array, v_new: Array, k: Array, v: Array,
                               width=width, block_w=block_w, scale=scale,
                               window=window, causal=causal,
                               interpret=interpret)
+
+
+def _paged_steps(n_pages: int, k_exp, v_exp, width: Optional[int]) -> Array:
+    """Per-page dequant steps [n_pages, 2] (ones for ``width=None``)."""
+    if width is None:
+        return jnp.ones((n_pages, 2), jnp.float32)
+    return jnp.stack([exact_pow2(jnp.asarray(k_exp, jnp.float32)),
+                      exact_pow2(jnp.asarray(v_exp, jnp.float32))], axis=-1)
+
+
+def flash_decode_paged(q: Array, k: Array, v: Array, bt: Array, pos: Array,
+                       q_pos: Array, k_exp=None, v_exp=None, *,
+                       width: Optional[int] = None, scale: float,
+                       window: Optional[int] = None, causal: bool = True,
+                       interpret: Optional[bool] = None,
+                       force_split: bool = False) -> Array:
+    """Fused single-query GQA attention through a per-request block table.
+
+    ``q``: [B, K, G, hd] kv-head-major query groups · ``k``/``v``:
+    [n_pages, P, K, hd] page arenas (int8/int16 mantissas or raw floats)
+    · ``bt``: int32 [B, nblocks] block tables (0 = null page) · ``pos``:
+    int32 [B, nblocks·P] logical positions (-1 = empty) · ``k_exp``/
+    ``v_exp``: f32 [n_pages] per-PAGE log2-steps.  Returns f32
+    [B, K, G, hd]; numerics are
+    :func:`repro.kernels.attn.ref.paged_decode_attention_ref`
+    (bit-identical in interpret mode).
+    """
+    B, K, G, hd = q.shape
+    n_pages, P = k.shape[:2]
+    interpret = resolve_interpret(interpret)
+    dispatch.paged_attn_blocks_for(P, G, hd, width=width,
+                                   interpret=interpret)
+    steps = _paged_steps(n_pages, k_exp, v_exp, width)
+    qpos = jnp.asarray(q_pos, jnp.int32).reshape(B, 1)
+    return flash_decode_paged_call(q.astype(jnp.float32), k, v,
+                                   bt.astype(jnp.int32),
+                                   pos.astype(jnp.int32), qpos, steps,
+                                   width=width, scale=scale, window=window,
+                                   causal=causal, interpret=interpret,
+                                   force_split=force_split)
+
+
+def flash_prefill_paged(q: Array, k_new: Array, v_new: Array, k: Array,
+                        v: Array, bt: Array, pos: Array, p0: Array,
+                        n_valid: Array, k_exp=None, v_exp=None, *,
+                        width: Optional[int] = None, scale: float,
+                        window: Optional[int] = None, causal: bool = True,
+                        interpret: Optional[bool] = None,
+                        force_split: bool = False) -> Array:
+    """Fused chunked-prefill GQA attention through a block table.
+
+    ``q``: [B, C, K, G, hd] chunk query groups starting at ``p0`` [B] ·
+    ``k_new``/``v_new``: f32 [B, C, K, hd] the chunk's own fresh K/V ·
+    ``k``/``v``: [n_pages, P, K, hd] page arenas · ``bt``: int32
+    [B, nblocks] · ``pos``: int32 [B, nblocks·P] · ``k_exp``/``v_exp``:
+    f32 [n_pages] per-PAGE log2-steps.  Returns f32 [B, C, K, G, hd];
+    numerics are
+    :func:`repro.kernels.attn.ref.paged_prefill_attention_ref`
+    (bit-identical in interpret mode).
+    """
+    B, C, K, G, hd = q.shape
+    n_pages, P = k.shape[:2]
+    interpret = resolve_interpret(interpret)
+    dispatch.paged_prefill_blocks_for(P, C, G, hd, width=width,
+                                      interpret=interpret)
+    steps = _paged_steps(n_pages, k_exp, v_exp, width)
+    p0 = jnp.asarray(p0, jnp.int32).reshape(B, 1)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(B, 1)
+    return flash_prefill_paged_call(q.astype(jnp.float32),
+                                    k_new.astype(jnp.float32),
+                                    v_new.astype(jnp.float32), k, v,
+                                    bt.astype(jnp.int32),
+                                    pos.astype(jnp.int32), p0, nv, steps,
+                                    width=width, scale=scale, window=window,
+                                    causal=causal, interpret=interpret,
+                                    force_split=force_split)

@@ -181,3 +181,169 @@ def flash_prefill_call(q, k_new, v_new, k, v, pos, p0, nv, steps, *, width,
                         _VMEM((C * G, hd), jnp.float32)],  # numerator
         interpret=interpret,
     )(p0, nv, steps, q, k_new, v_new, k, v, pos)
+
+
+# -- paged variant: one extra block-table indirection ---------------------
+#
+# History splits walk the request's mapped pages (split r streams page
+# bt[b, r] via a scalar-prefetch index_map) instead of its ring rows;
+# masking is unchanged — rows the request never wrote, including the
+# whole null page 0, carry pos == -1 — and the chunk's own K/V block
+# (grid step nblocks) is identical to the slot-major kernel.
+
+try:  # pragma: no cover — exercised only where pltpu imports
+    from jax.experimental.pallas import tpu as _pltpu
+except Exception:
+    _pltpu = None
+
+
+def _paged_split_kernel(bt_ref, p0_ref, nv_ref, steps_ref, q_ref, kn_ref,
+                        vn_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
+                        acc_ref, *, width, scale: float, window,
+                        causal: bool, nblocks: int, C: int, G: int, hd: int,
+                        P: int):
+    r = pl.program_id(2)
+    rows = C * G
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qf = q_ref[...].reshape(rows, hd)           # row = c * G + g
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // G
+    p0 = p0_ref[0, 0]
+    nv = nv_ref[0, 0]
+
+    def _update(kf, vf, valid):
+        s = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(r < nblocks)
+    def _history():
+        kf = _dequant(k_ref[...].reshape(P, hd), steps_ref[0, 0], width)
+        vf = _dequant(v_ref[...].reshape(P, hd), steps_ref[0, 1], width)
+        pos = pos_ref[...]                      # [1, P] logical positions
+        d = (p0 + cidx) - pos                   # [rows, P]
+        valid = (pos >= 0) & (pos < p0) & (cidx < nv)
+        if causal:
+            valid = valid & (d >= 0)
+        if window:
+            valid = valid & (d < window)
+        _update(kf, vf, valid)
+
+    @pl.when(r == nblocks)
+    def _self_and_done():
+        knf = kn_ref[...].reshape(C, hd)
+        vnf = vn_ref[...].reshape(C, hd)
+        j = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+        dj = cidx - j                           # [rows, C]
+        valid = (cidx < nv) & (j < nv)
+        if causal:
+            valid = valid & (dj >= 0)
+        if window:
+            valid = valid & (dj < window)
+        _update(knf, vnf, valid)
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.reshape(1, C, 1, G, hd).astype(o_ref.dtype)
+
+
+def _paged_batched_kernel(bt_ref, p0_ref, nv_ref, steps_ref, q_ref, kn_ref,
+                          vn_ref, k_ref, v_ref, pos_ref, o_ref, *, width,
+                          scale: float, window, causal: bool):
+    """One grid step, full shapes: the ref composite through the gather."""
+    bt = bt_ref[...]
+    kf = jnp.take(k_ref[...], bt, axis=0).astype(jnp.float32)
+    vf = jnp.take(v_ref[...], bt, axis=0).astype(jnp.float32)
+    if width is not None:
+        kf = kf * jnp.take(steps_ref[...][:, 0], bt)[..., None, None, None]
+        vf = vf * jnp.take(steps_ref[...][:, 1], bt)[..., None, None, None]
+    B, nblocks, P = kf.shape[:3]
+    shp = (B, nblocks * P) + kf.shape[3:]
+    o_ref[...] = R.chunk_attend(q_ref[...], kf.reshape(shp), vf.reshape(shp),
+                                pos_ref[...], kn_ref[...], vn_ref[...],
+                                p0_ref[:, 0], nv_ref[:, 0], scale=scale,
+                                window=window, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "scale", "window", "causal", "interpret", "force_split"))
+def flash_prefill_paged_call(q, k_new, v_new, k, v, bt, pos, p0, nv, steps,
+                             *, width, scale: float, window, causal: bool,
+                             interpret: bool, force_split: bool = False):
+    """Blocked chunked-prefill through a per-request block table.
+
+    ``q``: f32 [B, C, K, G, hd] · ``k_new``/``v_new``: f32 [B, C, K, hd] ·
+    ``k``/``v``: int8/int16/f32 [n_pages, P, K, hd] page arenas · ``bt``:
+    int32 [B, nblocks] · ``pos``: int32 [B, nblocks·P] · ``p0``/``nv``:
+    int32 [B, 1] · ``steps``: f32 [n_pages, 2] per-page dequant steps.
+    Returns f32 [B, C, K, G, hd].  Interpret mode runs the full-shape
+    gather body (bit-identical to ``ref.paged_prefill_attention_ref``)
+    unless ``force_split`` exercises the scalar-prefetch split path.
+    """
+    B, C, K, G, hd = q.shape
+    P = k.shape[1]
+    nblocks = bt.shape[1]
+    out_shape = jax.ShapeDtypeStruct((B, C, K, G, hd), jnp.float32)
+
+    if interpret and not force_split:
+        return pl.pallas_call(
+            functools.partial(_paged_batched_kernel, width=width, scale=scale,
+                              window=window, causal=causal),
+            out_shape=out_shape,
+            interpret=True,
+        )(bt, p0, nv, steps, q, k_new, v_new, k, v, pos)
+    if _pltpu is None:  # pragma: no cover — compiled TPU implies pltpu
+        raise RuntimeError(
+            "paged flash-prefill needs jax.experimental.pallas.tpu for "
+            "scalar-prefetch block-table index maps")
+
+    last = nblocks - 1   # step nblocks re-reads a clamped page tile
+    grid_spec = _pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, nblocks + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, r, bt: (b, 0)),        # p0
+            pl.BlockSpec((1, 1), lambda b, h, r, bt: (b, 0)),        # nv
+            pl.BlockSpec((1, 2),
+                         lambda b, h, r, bt: (bt[b, jnp.minimum(r, last)],
+                                              0)),                   # steps
+            pl.BlockSpec((1, C, 1, G, hd),
+                         lambda b, h, r, bt: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, C, 1, hd),
+                         lambda b, h, r, bt: (b, 0, h, 0)),          # kn
+            pl.BlockSpec((1, C, 1, hd),
+                         lambda b, h, r, bt: (b, 0, h, 0)),          # vn
+            pl.BlockSpec((1, P, 1, hd),
+                         lambda b, h, r, bt: (bt[b, jnp.minimum(r, last)],
+                                              0, h, 0)),             # k page
+            pl.BlockSpec((1, P, 1, hd),
+                         lambda b, h, r, bt: (bt[b, jnp.minimum(r, last)],
+                                              0, h, 0)),             # v page
+            pl.BlockSpec((1, P),
+                         lambda b, h, r, bt: (b, jnp.minimum(r, last))),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, G, hd),
+                               lambda b, h, r, bt: (b, 0, h, 0, 0)),
+        scratch_shapes=[_VMEM((C * G, 1), jnp.float32),    # running max
+                        _VMEM((C * G, 1), jnp.float32),    # denominator
+                        _VMEM((C * G, hd), jnp.float32)],  # numerator
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_split_kernel, width=width, scale=scale,
+                          window=window, causal=causal, nblocks=nblocks,
+                          C=C, G=G, hd=hd, P=P),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bt, p0, nv, steps, q, k_new, v_new, k, v, pos)

@@ -130,6 +130,59 @@ def dequant(m: Array, e: Array) -> Array:
     return m.astype(jnp.float32) * exact_pow2(e)[:, None, None, None]
 
 
+def gather_pages(m: Array, e: Optional[Array], bt: Array,
+                 width: Optional[int]) -> Array:
+    """Block-table gather: paged storage → the slot-major wide layout.
+
+    ``m``: [n_pages, P, K, hd] page arena (int mantissas when ``width``,
+    raw floats otherwise) · ``e``: f32 [n_pages] per-page log2-steps ·
+    ``bt``: int32 [B, nblocks] block table.  Returns f32
+    [B, nblocks·P, K, hd] — logical row ``r`` is page ``bt[b, r // P]``
+    offset ``r % P``, exactly the layout ``pos`` [B, nblocks·P] indexes,
+    so :func:`attend`/:func:`chunk_attend` apply unchanged.
+    """
+    x = jnp.take(m, bt, axis=0).astype(jnp.float32)    # [B, nblocks, P, ...]
+    if width is not None:
+        x = x * exact_pow2(jnp.take(e, bt, axis=0))[..., None, None, None]
+    B, nblocks, P = x.shape[:3]
+    return x.reshape((B, nblocks * P) + x.shape[3:])
+
+
+def paged_decode_attention_ref(q: Array, k: Array, v: Array, bt: Array,
+                               pos: Array, q_pos: Array, *, k_exp=None,
+                               v_exp=None, width: Optional[int] = None,
+                               scale: float, window: Optional[int] = None,
+                               causal: bool = True) -> Array:
+    """Decode composite through the block-table gather.
+
+    ``k``/``v`` are the [n_pages, P, K, hd] page arenas with per-**page**
+    ``k_exp``/``v_exp`` [n_pages] (the
+    :class:`repro.serve.paged.PagedKVCodec` layout, one layer); the rest
+    matches :func:`decode_attention_ref`.
+    """
+    kf = gather_pages(k, k_exp, bt, width)
+    vf = gather_pages(v, v_exp, bt, width)
+    return attend(q.astype(jnp.float32), kf, vf, pos, q_pos, scale=scale,
+                  window=window, causal=causal)
+
+
+def paged_prefill_attention_ref(q: Array, k: Array, v: Array, bt: Array,
+                                pos: Array, k_new: Array, v_new: Array,
+                                p0: Array, n_valid: Array, *, k_exp=None,
+                                v_exp=None, width: Optional[int] = None,
+                                scale: float, window: Optional[int] = None,
+                                causal: bool = True) -> Array:
+    """Chunked-prefill composite through the block-table gather — the
+    numerics contract of the paged flash-prefill kernel, in the
+    :class:`repro.serve.paged.PagedKVCodec` entry layout (one layer)."""
+    kf = gather_pages(k, k_exp, bt, width)
+    vf = gather_pages(v, v_exp, bt, width)
+    return chunk_attend(q.astype(jnp.float32), kf, vf, pos,
+                        k_new.astype(jnp.float32), v_new.astype(jnp.float32),
+                        p0, n_valid, scale=scale, window=window,
+                        causal=causal)
+
+
 def decode_attention_ref(q: Array, k: Array, v: Array, pos: Array,
                          q_pos: Array, *, k_exp=None, v_exp=None,
                          width: Optional[int] = None, scale: float,

@@ -424,6 +424,44 @@ def prefill_blocks_for(W: int, C: int, G: int, hd: int, *, width=None,
 
 
 # ---------------------------------------------------------------------------
+# paged-attention split validation (repro.kernels.attn *_paged)
+# ---------------------------------------------------------------------------
+
+def paged_attn_blocks_for(P: int, G: int, hd: int, *, width=None,
+                          interpret: bool) -> int:
+    """Split size for the paged flash-decode kernel — always the page.
+
+    The paged grid walks the block table one physical page per step, so
+    the page size *is* the split size and there is nothing to tune; this
+    is the dispatch layer's validation hook instead: a ``--page-size``
+    whose (P, hd) tile would bust the VMEM budget fails loudly at the
+    first call, not as a compiler OOM deep in a serve step.  Interpret
+    mode has no VMEM and accepts any page.
+    """
+    if not interpret and not _attn_fits(P, G, hd, width):
+        raise ValueError(
+            f"page_size {P} (G={G}, hd={hd}, width={width}) exceeds the "
+            f"{_VMEM_BUDGET >> 20}MB VMEM tile budget of the paged "
+            "flash-decode kernel; use a smaller --page-size")
+    return P
+
+
+def paged_prefill_blocks_for(P: int, C: int, G: int, hd: int, *, width=None,
+                             interpret: bool) -> int:
+    """Split size for the paged flash-prefill kernel — always the page.
+
+    Same contract as :func:`paged_attn_blocks_for`, with the chunk's
+    ``C·G`` score rows included in the fit check.
+    """
+    if not interpret and not _prefill_fits(P, C, G, hd, width):
+        raise ValueError(
+            f"page_size {P} (C={C}, G={G}, hd={hd}, width={width}) exceeds "
+            f"the {_VMEM_BUDGET >> 20}MB VMEM tile budget of the paged "
+            "flash-prefill kernel; use a smaller --page-size or chunk")
+    return P
+
+
+# ---------------------------------------------------------------------------
 # differentiable fused matmul
 # ---------------------------------------------------------------------------
 
@@ -537,7 +575,8 @@ def tape_dot(x, w, e_w, *, width: int, transpose_b: bool = False,
 
 
 __all__ = ["fused_dot", "tape_dot", "blocks_for", "attn_blocks_for",
-           "prefill_blocks_for", "autotune_cache", "reset_autotune",
+           "prefill_blocks_for", "paged_attn_blocks_for",
+           "paged_prefill_blocks_for", "autotune_cache", "reset_autotune",
            "set_autotune", "save_autotune", "load_autotune",
            "default_interpret"]
 

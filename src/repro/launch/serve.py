@@ -104,6 +104,13 @@ def main(argv=None):
                          "the packed pool). 0 = whole-prompt prefill (the "
                          "bit-for-bit reference). Attention-family archs "
                          "only; MoE/SSM stay on the whole-prompt path")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV pool: page size P in tokens (0 = "
+                         "slot-major rings). Pages carry their own DFXP "
+                         "exponents; requests sharing a prompt prefix map "
+                         "the same pages (refcounted, copy-on-write on "
+                         "divergence). Implies --prefill-chunk P unless "
+                         "set. Dense global-attention archs only")
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -113,7 +120,8 @@ def main(argv=None):
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode,
-                             prefill_chunk=args.prefill_chunk)
+                             prefill_chunk=args.prefill_chunk,
+                             page_size=args.page_size)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     lens = _parse_lens(args.prompt_len)
     slots = args.slots or min(args.num_requests, 4)

@@ -65,7 +65,7 @@ from repro.core.policy import PrecisionPolicy
 from repro.models import layers as L
 from repro.models import transformer as T
 
-from . import kv_pool, metrics, sampler
+from . import kv_pool, metrics, paged, sampler
 
 Array = jax.Array
 
@@ -103,6 +103,19 @@ class ServeEngine:
         keeps the solo whole-prompt carve-out (batch-coupled expert
         capacity) and SSM/hybrid carry recurrent state across the
         prompt; both silently stay on the whole-prompt path.
+    page_size: ``P > 0`` switches the KV pool to **paged** storage
+        (:mod:`repro.serve.paged`): fixed-size pages + per-request block
+        tables, refcounted prompt-prefix sharing with copy-on-write, and
+        page-granular DFXP exponents.  Forces chunked prefill (``C``
+        defaults to ``P``) and requires the dense attention family with
+        global (non-windowed) attention; ``None``/0 takes
+        ``policy.page_size``.  Prefix sharing is disabled under
+        stochastic rounding (a shared page cannot replay two requests'
+        PRNG streams) — pages and copy-on-write still apply.
+    n_pages: paged-pool page budget (default: full residency — every
+        slot can map its whole ``max_len`` — plus the null page).  A
+        smaller budget recycles freed/evicted pages and raises
+        ``RuntimeError`` on exhaustion.
     """
 
     def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
@@ -110,7 +123,9 @@ class ServeEngine:
                  sampler_cfg: sampler.SamplerConfig = sampler.SamplerConfig(),
                  cache_cfg: Optional[kv_pool.CacheQuantConfig] = None,
                  seed: int = 0, init_exp: float = -6.0,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         if cfg.input_mode != "tokens" or cfg.encoder_layers:
             raise ValueError("ServeEngine serves token-in decoder models")
         if max_slots < 1:
@@ -125,21 +140,60 @@ class ServeEngine:
                       for n, s in gs.items() if n.startswith("g:")}
 
         fused = bool(getattr(policy, "fused_decode", False))
+        psize = page_size if page_size is not None else \
+            int(getattr(policy, "page_size", 0))
+        self.page_size = int(psize) if psize else 0
+        self._paged = bool(self.page_size)
         if cache_bits:
             self.cache_cfg = cache_cfg or kv_pool.CacheQuantConfig(
                 width=cache_bits)
             if self.cache_cfg.width != cache_bits:
                 raise ValueError("cache_bits and cache_cfg.width disagree")
-            self.codec = kv_pool.PackedKVCodec(self.cache_cfg,
-                                               fused_decode=fused)
+            if self._paged:
+                self.codec = paged.PagedKVCodec(self.page_size,
+                                                self.cache_cfg,
+                                                fused_decode=fused)
+            else:
+                self.codec = kv_pool.PackedKVCodec(self.cache_cfg,
+                                                   fused_decode=fused)
         else:
             # f32 pool; with --fused-decode the raw codec still routes
             # attention through the flash-decode kernel (width=None)
             self.cache_cfg = None
-            self.codec = L.RawKVCodec(fused_decode=True) if fused else None
+            if self._paged:
+                # paged f32 still needs the paged codec: attention must
+                # gather history through the block table either way
+                self.codec = paged.PagedKVCodec(self.page_size, None,
+                                                fused_decode=fused)
+            else:
+                self.codec = L.RawKVCodec(fused_decode=True) if fused \
+                    else None
         self._packed = bool(cache_bits)
-        self._pool = kv_pool.make_pool(cfg, max_slots, max_len,
-                                       self.codec if self._packed else None)
+        if self._paged:
+            if (cfg.family != "dense" or cfg.num_experts
+                    or cfg.encoder_layers):
+                raise ValueError(
+                    "paged KV pool requires the dense attention family "
+                    "(chunked prefill writes pages incrementally)")
+            self._pool = paged.make_paged_pool(cfg, max_slots, max_len,
+                                               self.codec, n_pages=n_pages)
+            nblocks = -(-max_len // self.page_size)
+            total_pages = n_pages if n_pages is not None else \
+                1 + max_slots * nblocks
+            self._alloc = paged.PageAllocator(total_pages, self.page_size,
+                                              nblocks)
+            # a shared page cannot replay two requests' stochastic PRNG
+            # chains — sharing off, COW/paging still on
+            self._share_prefix = not (self._packed
+                                      and self.cache_cfg.stochastic)
+            self._reset_slot = jax.jit(paged.reset_slot,
+                                       donate_argnums=(0,))
+            self._cow = jax.jit(paged.cow_page, donate_argnums=(0,))
+            self._set_block = jax.jit(paged.set_block, donate_argnums=(0,))
+        else:
+            self._pool = kv_pool.make_pool(
+                cfg, max_slots, max_len,
+                self.codec if self._packed else None)
 
         # per-slot host state
         B = max_slots
@@ -159,10 +213,13 @@ class ServeEngine:
         # state couple a whole prompt; they keep the whole-prompt path)
         pc = prefill_chunk if prefill_chunk is not None else \
             int(getattr(policy, "prefill_chunk", 0))
+        if self._paged and not pc:
+            pc = self.page_size   # paged mode always prefills in chunks
         chunkable = (cfg.family == "dense" and not cfg.num_experts
                      and not cfg.encoder_layers)
         self.prefill_chunk = pc if (pc and chunkable) else 0
         self._pfill = np.zeros(B, np.int32)       # prefill frontier per slot
+        self._pstarted = np.zeros(B, bool)        # paged: block table mapped
         self._prefilling: collections.deque = collections.deque()  # slot FIFO
 
         # the pool argument is donated: decode/insert rewrite it in place
@@ -223,14 +280,14 @@ class ServeEngine:
     def _chunk_impl(self, pool, tokens, slot, p0, n_valid, keys):
         """One prefill chunk for one slot. ``tokens``: [1, C] (padded);
         ``slot``/``p0``/``n_valid``: traced scalars; ``keys``: [1, 2]."""
-        sub = jax.tree_util.tree_map(
-            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), pool)
+        # paged-aware slicing: slot-indexed leaves narrow to B=1, page
+        # arenas pass through whole (the chunk scatters into its own
+        # slot's pages); reduces to the plain tree_map for slot-major
+        sub = paged.slice_slot(pool, slot)
         logits, _, sub = T.prefill_chunk_step(
             self.cfg, self.policy, self.params, sub, tokens, p0[None],
             n_valid[None], self.exps, self.sinks, kv_codec=self.codec)
-        pool = jax.tree_util.tree_map(
-            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
-                full, s, slot, axis=1), pool, sub)
+        pool = paged.merge_slot(pool, sub, slot)
         # the first generated token sits at absolute position p0 + n_valid
         # (== prompt length when this is the final chunk) — the same key
         # fold as whole-prompt _prefill_impl
@@ -268,6 +325,11 @@ class ServeEngine:
         if self._packed:
             self._ovf += np.asarray(self._slot_tot(self._pool, slot),
                                     np.float64)
+        if self._paged:
+            # decref the slot's pages AFTER the stats harvest above read
+            # them; registered prefix pages stay resident for reuse
+            self._alloc.free_slot(slot)
+            self._pstarted[slot] = False
         self._active[slot] = False
         self._reqs[slot] = None
 
@@ -318,6 +380,7 @@ class ServeEngine:
             s = free.pop(0)
             self._reqs[s] = r
             self._pfill[s] = 0
+            self._pstarted[s] = False
             self._pos[s] = 0
             self._gen[s] = []
             self._active[s] = False
@@ -329,17 +392,49 @@ class ServeEngine:
             self._prefilling.append(s)
             self.metrics.on_admit(r.uid)
 
+    def _ensure_blocks(self, slot: int, start: int, n: int) -> None:
+        """Paged mode: make the blocks covering rows ``[start, start+n)``
+        privately writable — allocate fresh pages at block boundaries and
+        fork (copy-on-write) shared pages the slot is about to write."""
+        P = self.page_size
+        for b in range(start // P, (start + n - 1) // P + 1):
+            act = self._alloc.ensure_block(slot, b)
+            if act is None:
+                continue
+            kind, src, dst = act
+            if kind == "cow":
+                self._pool = self._cow(self._pool, jnp.int32(src),
+                                       jnp.int32(dst))
+            self._pool = self._set_block(self._pool, jnp.int32(slot),
+                                         jnp.int32(b), jnp.int32(dst))
+
     def _step_prefill_chunk(self) -> None:
         """Run ONE chunk for the oldest prefilling slot (FIFO)."""
         if not self._prefilling:
             return
         s = self._prefilling[0]
         r = self._reqs[s]
+        if self._paged and not self._pstarted[s]:
+            # first chunk for this request: map its block table, reusing
+            # any registered prefix pages (refcounted, read-only until a
+            # write forces a copy-on-write fork).  FIFO chunk order means
+            # an earlier request registers its prefix before a later
+            # request's first chunk looks it up.
+            pages, shared = (self._alloc.match_prefix(r.tokens)
+                             if self._share_prefix else ([], 0))
+            row = self._alloc.new_slot(s, pages)
+            self._pool = self._reset_slot(
+                self._pool, jnp.int32(s), jnp.int32(shared),
+                jnp.asarray(row), jnp.float32(shared))
+            self._pfill[s] = shared   # shared rows are already written
+            self._pstarted[s] = True
         f = int(self._pfill[s])
         C = self.prefill_chunk
         n = min(C, r.tokens.size - f)
         toks = np.zeros((1, C), np.int32)
         toks[0, :n] = r.tokens[f:f + n]
+        if self._paged:
+            self._ensure_blocks(s, f, n)
         first, self._pool = self._chunk(
             self._pool, jnp.asarray(toks), jnp.int32(s), jnp.int32(f),
             jnp.int32(n), jnp.asarray(self._keys[s:s + 1]))
@@ -348,6 +443,8 @@ class ServeEngine:
         self.metrics.on_prefill_chunk(r.uid)
         if f + n == r.tokens.size:    # final chunk: first token sampled
             self._prefilling.popleft()
+            if self._paged and self._share_prefix:
+                self._alloc.register_prefix(s, r.tokens)
             tok = int(np.asarray(first)[0])
             self.metrics.on_token(r.uid)
             self._gen[s] = [tok]
@@ -366,6 +463,11 @@ class ServeEngine:
         if not self._active.any():
             return
         if self.prefill_chunk:
+            if self._paged:
+                # each active slot appends one row at _pos this step —
+                # fresh page at a block boundary, COW if still shared
+                for s in np.where(self._active)[0]:
+                    self._ensure_blocks(int(s), int(self._pos[s]), 1)
             nxt, self._pool = self._decode(
                 self._pool, jnp.asarray(self._tok), jnp.asarray(self._pos),
                 jnp.asarray(self._keys), jnp.asarray(self._active))
@@ -427,4 +529,7 @@ class ServeEngine:
                 "cache_appends_quantized": float(tot)}
 
     def stats(self) -> dict:
-        return self.metrics.summary(extra=self.cache_stats())
+        extra = self.cache_stats()
+        if self._paged:
+            extra.update(self._alloc.stats())
+        return self.metrics.summary(extra=extra)

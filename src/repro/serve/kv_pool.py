@@ -446,12 +446,35 @@ def overflow_summary(pool: dict, active=None) -> dict:
 
     ``active``: optional bool [B] mask restricting the summary to occupied
     slots (freed slots keep decoding garbage into their own rows).
-    Returns zeros for float32 pools.
+    Returns zeros for float32 pools (slot-major or paged).
+
+    Paged pools keep statistics per PAGE, not per slot: the summary walks
+    the active slots' block tables and counts each referenced page ONCE,
+    however many requests share it (a shared prefix page's appends
+    happened once, on first write).  With ``active=None`` every non-null
+    page counts, including residue on freed-but-unreused pages.
     """
     ovf = tot = 0.0
     for sc in pool.values():
         for e in sc.values():
-            if "k_m" not in e:
+            if "k_m" not in e or "tot_k" not in e:
+                continue
+            if "bt" in e:                 # paged: per-page statistics
+                n, n_pages = e["tot_k"].shape[:2]
+                if active is None:
+                    used = jnp.ones((n, n_pages), bool)
+                else:
+                    act = jnp.asarray(active, bool)
+                    sel = jnp.where(act[None, :, None], e["bt"], 0)
+                    off = jnp.arange(n)[:, None, None] * n_pages
+                    used = jnp.zeros((n * n_pages,), bool).at[
+                        (sel + off).reshape(-1)].set(True)
+                    used = used.reshape(n, n_pages)
+                used = used.at[:, 0].set(False)   # null page never counts
+                m = used.astype(jnp.float32)[..., None]
+                for t in (e["tot_k"], e["tot_v"]):
+                    ovf = ovf + float(jnp.sum((t * m)[..., 0]))
+                    tot = tot + float(jnp.sum((t * m)[..., 2]))
                 continue
             for t in (e["tot_k"], e["tot_v"]):
                 t = t if active is None else t * jnp.asarray(
@@ -468,11 +491,25 @@ def slot_totals(pool: dict, slot) -> Array:
     Admission (``pack_entry``) zeroes the slot's counters, so between admit
     and finish this is exactly the occupying request's append statistics —
     the engine harvests it when the request completes.
+
+    Paged pools: gathers the per-page counters of every page on the
+    slot's block table (the null page carries zeros).  Pages a request
+    inherited from a shared prefix count toward each request that maps
+    them — totals are per-request by design, mirroring the slot-major
+    semantics where each request re-appends its own prefix.
     """
     out = jnp.zeros((3,), jnp.float32)
     for sc in pool.values():
         for e in sc.values():
-            if "k_m" in e:
-                out = out + jnp.sum(e["tot_k"][:, slot], axis=0)
-                out = out + jnp.sum(e["tot_v"][:, slot], axis=0)
+            if "k_m" not in e or "tot_k" not in e:
+                continue
+            if "bt" in e:                 # paged: walk the block table
+                idx = e["bt"][:, slot][..., None]       # [n, nblocks, 1]
+                for t in (e["tot_k"], e["tot_v"]):
+                    g = jnp.take_along_axis(t, jnp.broadcast_to(
+                        idx, idx.shape[:2] + (3,)), axis=1)
+                    out = out + jnp.sum(g, axis=(0, 1))
+                continue
+            out = out + jnp.sum(e["tot_k"][:, slot], axis=0)
+            out = out + jnp.sum(e["tot_v"][:, slot], axis=0)
     return out

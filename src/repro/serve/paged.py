@@ -1,0 +1,748 @@
+"""Paged KV pool: fixed-size pages + per-request block tables (vLLM-style).
+
+The slot-major pool (:mod:`repro.serve.kv_pool`) reserves every slot's
+worst-case ``[W]`` ring rows for the request's whole lifetime, and two
+requests with the same system prompt re-prefill and re-store it twice.
+This module replaces that reservation with **pages**: K/V mantissas live
+in a global ``[n_pages, page_size, K, hd]`` arena per layer, a per-request
+*block table* maps logical token blocks to physical pages, and admission
+hashes the prompt prefix page-by-page so identical prefixes map the same
+physical pages copy-on-write (refcounted; any write to a shared page
+forks a private copy first).
+
+DFXP storage keeps the paper's §5 discipline, at the granularity this
+layout forces (Ortiz et al. 2018's block-wise shared exponents):
+
+* exponents, overflow accumulators, and cumulative counters are
+  **per-page** (``[n_pages]`` / ``[n_pages, 3]``) — a shared page carries
+  one exponent no matter how many requests map it;
+* a page calibrates (``core.scale.calibrate_exp`` + margin bit) when its
+  first row is written; later writes quantize against the page exponent;
+* the ×2/÷2 controller applies on the writing request's
+  ``update_interval`` crossings, to its **tail page** only — completed
+  pages are immutable (shared pages are never written; copy-on-write
+  forks them first), so rescaling them would cost a re-grid with no
+  accuracy return.
+
+Split of responsibilities:
+
+* :class:`PagedKVCodec` — the jit side.  Implements the
+  ``repro.models.layers.RawKVCodec`` protocol on paged entries, so the
+  model layer stays storage-agnostic.  ``width=None`` stores raw f32
+  pages (bit-identical to the slot-major f32 pool through the same
+  logical positions).
+* :class:`PageAllocator` — the host side.  Free list, refcounts, the
+  prompt-prefix hash index, copy-on-write decisions, and peak-usage
+  accounting.  The engine consults it between steps and applies its
+  decisions through the jitted pool ops (:func:`reset_slot`,
+  :func:`cow_page`, :func:`set_block`).
+
+Page 0 is the permanent **null page**: block-table rows point at it when
+no page is mapped, its rows are never written, and its ``pos`` image is
+always -1 so attention masks it out.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packed import (_overflow_counts, container_dtype, pack_rows,
+                               qrange)
+from repro.core.quant import exact_pow2
+from repro.core.scale import ScaleState, calibrate_exp, controller_step
+from repro.models import transformer as T
+from repro.serve.kv_pool import CacheQuantConfig, _rescale, is_attn_entry
+
+Array = jax.Array
+
+# entry leaves indexed by slot on axis 1 (full [n, B, ...] shapes); the
+# page-storage leaves (k_m/v_m/k_e/v_e/acc_*/tot_*) are indexed by page
+_SLOT_KEYS = ("bt", "pos", "n_app", "key")
+
+
+def is_paged_entry(entry: dict) -> bool:
+    """True for paged attention cache entries (block table present)."""
+    return isinstance(entry, dict) and "bt" in entry and "pos" in entry
+
+
+def _pack_paged_rows(x: Array, width: int, e_rows: Array, keep: Array,
+                     key=None, det=None):
+    """Quantize chunk rows ``[B, C, ...]`` against per-row exponents.
+
+    Unlike ``kv_pool._pack_chunk`` (one exponent per slot), ``e_rows``
+    is ``[B, C]`` — each row quantizes against *its destination page's*
+    exponent.  Returns ``(mantissa int[B, C, ...], stats f32[B, C, 3])``
+    with per-row statistics so the caller can scatter-add them per page.
+    """
+    qmax, qmin = qrange(width)
+    step = exact_pow2(e_rows).reshape(e_rows.shape + (1,) * (x.ndim - 2))
+    m = x.astype(jnp.float32) / step
+    if key is not None:
+        u = jax.vmap(lambda k: jax.random.uniform(k, m.shape[1:]))(key)
+        m = jnp.where(det.reshape((-1,) + (1,) * (x.ndim - 1)),
+                      jnp.round(m), jnp.floor(m + u))
+    else:
+        m = jnp.round(m)
+    kexp = keep.reshape(keep.shape + (1,) * (x.ndim - 2))
+    axes = tuple(range(2, x.ndim))
+    ovf, ovfh = _overflow_counts(m, width, axes=axes, mask=kexp)
+    row_sz = float(np.prod(x.shape[2:]))
+    total = keep.astype(jnp.float32) * row_sz
+    stats = jnp.stack([ovf, ovfh, total], axis=-1)           # [B, C, 3]
+    m = jnp.clip(m, qmin, qmax).astype(container_dtype(width))
+    return m, stats
+
+
+class PagedKVCodec:
+    """KV-cache codec over paged storage + per-request block tables.
+
+    Entry layout (leading layer dim ``n`` stripped inside the layer
+    scan; ``P`` = page_size, ``Wp`` = nblocks × P ≥ max_len)::
+
+        k_m, v_m : int8/int16 (or f32) [n, n_pages, P, K, hd]  page arena
+        bt       : int32 [n, B, nblocks]   block table (0 = null page)
+        pos      : int32 [n, B, Wp]        logical positions (-1 = empty)
+        k_e, v_e : f32 [n, n_pages]        per-PAGE log2-steps (packed)
+        acc_k/v  : f32 [n, n_pages, 3]     controller window stats
+        tot_k/v  : f32 [n, n_pages, 3]     cumulative stats (metrics)
+        n_app    : f32 [n, B]              absolute stored-token count
+        key      : uint32 [n, B, 2]        (stochastic mode only)
+
+    The block table is duplicated per layer so it rides the layer
+    ``lax.scan`` with the rest of the entry; every layer's row is
+    identical (one allocator decision maps a logical block to the same
+    page id in every layer's arena).  Logical row ``r`` of a request
+    lives at physical ``(bt[b, r // P], r % P)``; ``pos`` is indexed by
+    the logical row, so attention masking is unchanged from the
+    slot-major pool.
+
+    ``config=None`` stores raw f32 pages — no exponents, statistics, or
+    controller; token streams are bit-identical to the slot-major f32
+    pool.  Admission state (position reset, block-table row, prefix
+    sharing) is **host-driven** via :func:`reset_slot` — unlike
+    ``PackedKVCodec.append_chunk`` there is no ``p0 == 0`` reset here,
+    only the slot-major rounding convention (admission chunks round
+    deterministically in stochastic mode).
+    """
+
+    def __init__(self, page_size: int, config: Optional[CacheQuantConfig]
+                 = None, fused_decode: bool = False):
+        if page_size < 1:
+            raise ValueError(f"page_size {page_size} < 1")
+        self.page_size = page_size
+        self.cfg = config
+        self.fused_decode = fused_decode
+
+    @property
+    def width(self) -> Optional[int]:
+        return None if self.cfg is None else self.cfg.width
+
+    # -- model-layer protocol (called per layer inside lax.scan) ----------
+    def load(self, entry: dict):
+        """Gather the block table into ``[B, Wp, K, hd]`` f32 K/V."""
+        bt = entry["bt"]                                     # [B, nblocks]
+        B, nblocks = bt.shape
+        P = entry["k_m"].shape[1]
+        k = jnp.take(entry["k_m"], bt, axis=0).astype(jnp.float32)
+        v = jnp.take(entry["v_m"], bt, axis=0).astype(jnp.float32)
+        if self.cfg is not None:
+            k = k * exact_pow2(jnp.take(entry["k_e"], bt,
+                                        axis=0))[..., None, None, None]
+            v = v * exact_pow2(jnp.take(entry["v_e"], bt,
+                                        axis=0))[..., None, None, None]
+        shp = (B, nblocks * P) + k.shape[3:]
+        return k.reshape(shp), v.reshape(shp), entry["pos"]
+
+    def fused_attention(self, entry: dict, qg: Array, q_pos: Array, *,
+                        scale: float, window=None, causal: bool = True):
+        """Flash-decode through the block-table gather (no ``load``)."""
+        from repro.kernels.attn.ops import flash_decode_paged
+        return flash_decode_paged(
+            qg, entry["k_m"], entry["v_m"], entry["bt"], entry["pos"], q_pos,
+            entry.get("k_e"), entry.get("v_e"), width=self.width,
+            scale=scale, window=window, causal=causal)
+
+    def fused_prefill(self, entry: dict, qg: Array, k_new: Array,
+                      v_new: Array, p0: Array, n_valid: Array, *,
+                      scale: float, window=None, causal: bool = True):
+        """Flash-prefill through the block-table gather (no ``load``)."""
+        from repro.kernels.attn.ops import flash_prefill_paged
+        return flash_prefill_paged(
+            qg, k_new, v_new, entry["k_m"], entry["v_m"], entry["bt"],
+            entry["pos"], p0, n_valid, entry.get("k_e"), entry.get("v_e"),
+            width=self.width, scale=scale, window=window, causal=causal)
+
+    def append(self, entry: dict, k_new: Array, v_new: Array,
+               pos: Array, mask: Optional[Array] = None) -> dict:
+        """Append one token's K/V per slot into its tail page.
+
+        The engine guarantees the destination block is writable before
+        the step runs: a block whose row 0 is being written was mapped to
+        a fresh private page, and a shared tail page was copy-on-write
+        forked (:meth:`PageAllocator.ensure_block`).  A row whose page
+        starts here (``pos % P == 0``) calibrates the page exponent from
+        the row and resets the page's statistics; ``mask`` drops writes,
+        statistics, counter advances, and PRNG moves exactly like the
+        slot-major codec.
+        """
+        P = entry["k_m"].shape[1]
+        n_pages = entry["k_m"].shape[0]
+        bt = entry["bt"]
+        B = bt.shape[0]
+        Wp = entry["pos"].shape[1]
+        bidx = jnp.arange(B)
+        posi = pos.astype(jnp.int32)
+        blk = jnp.clip(posi // P, 0, bt.shape[1] - 1)
+        off = posi % P
+        pages = bt[bidx, blk]                                # [B]
+        mask = jnp.ones((B,), bool) if mask is None else mask
+        wpg = jnp.where(mask, pages, n_pages)                # OOB rows drop
+        wrow = jnp.where(mask, posi, Wp)
+
+        out = dict(entry)
+        if self.cfg is None:
+            out["k_m"] = entry["k_m"].at[wpg, off].set(k_new, mode="drop")
+            out["v_m"] = entry["v_m"].at[wpg, off].set(v_new, mode="drop")
+            out["pos"] = entry["pos"].at[bidx, wrow].set(posi, mode="drop")
+            return out
+
+        cfg = self.cfg
+        key_k = key_v = None
+        if cfg.stochastic:
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(entry["key"])
+            key_k, key_v = ks[:, 0], ks[:, 1]
+            out["key"] = jnp.where(mask[:, None], ks[:, 2], entry["key"])
+
+        fresh = (off == 0) & mask
+        wfresh = jnp.where(fresh, pages, n_pages)
+
+        def _cal(x):
+            ax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 2))
+            return calibrate_exp(ax, cfg.width, cfg.margin_bits)
+
+        k_e = entry["k_e"].at[wfresh].set(_cal(k_new), mode="drop")
+        v_e = entry["v_e"].at[wfresh].set(_cal(v_new), mode="drop")
+        k_m, st_k = pack_rows(k_new, cfg.width, k_e[pages],
+                              stochastic_keys=key_k)
+        v_m, st_v = pack_rows(v_new, cfg.width, v_e[pages],
+                              stochastic_keys=key_v)
+        mf = mask.astype(jnp.float32)
+        st_k = st_k * mf[:, None]
+        st_v = st_v * mf[:, None]
+        k_buf = entry["k_m"].at[wpg, off].set(k_m, mode="drop")
+        v_buf = entry["v_m"].at[wpg, off].set(v_m, mode="drop")
+        out["pos"] = entry["pos"].at[bidx, wrow].set(posi, mode="drop")
+        acc_k = entry["acc_k"].at[wfresh].set(0.0, mode="drop") \
+            .at[wpg].add(st_k, mode="drop")
+        acc_v = entry["acc_v"].at[wfresh].set(0.0, mode="drop") \
+            .at[wpg].add(st_v, mode="drop")
+        out["tot_k"] = entry["tot_k"].at[wfresh].set(0.0, mode="drop") \
+            .at[wpg].add(st_k, mode="drop")
+        out["tot_v"] = entry["tot_v"].at[wfresh].set(0.0, mode="drop") \
+            .at[wpg].add(st_v, mode="drop")
+        pf = posi.astype(jnp.float32)
+        out["n_app"] = jnp.where(mask, pf + 1.0, entry["n_app"])
+
+        # §5 controller on update_interval crossings of the absolute
+        # stored-token count, applied to the writing row's page only
+        interval = float(cfg.update_interval)
+        cross = (jnp.floor((pf + 1.0) / interval)
+                 > jnp.floor(pf / interval)) & mask
+        apply = jnp.zeros((n_pages,), bool).at[
+            jnp.where(cross, pages, n_pages)].set(True, mode="drop")
+        st = controller_step(
+            ScaleState(exps={"k": k_e, "v": v_e},
+                       acc={"k": acc_k, "v": acc_v}),
+            max_overflow_rate=cfg.max_overflow_rate, apply=apply)
+        out["k_e"], out["v_e"] = st.exps["k"], st.exps["v"]
+        out["acc_k"], out["acc_v"] = st.acc["k"], st.acc["v"]
+        de_k = out["k_e"] - k_e
+        de_v = out["v_e"] - v_e
+        out["k_m"], out["v_m"] = jax.lax.cond(
+            jnp.any(de_k != 0.0) | jnp.any(de_v != 0.0),
+            lambda a: (_rescale(a[0], de_k, cfg.width),
+                       _rescale(a[1], de_v, cfg.width)),
+            lambda a: a, (k_buf, v_buf))
+        return out
+
+    def append_chunk(self, entry: dict, k_new: Array, v_new: Array,
+                     p0: Array, n_valid: Array) -> dict:
+        """Quantize-on-write one prefill chunk into the mapped pages.
+
+        A page is **fresh** when its first logical row is inside this
+        chunk (``block·P >= p0``): it calibrates from the chunk rows
+        landing on it and its statistics reset.  A partially-filled page
+        continuing from an earlier chunk (or a copy-on-write fork of a
+        shared tail) keeps its exponent.  ``n_app`` tracks the absolute
+        stored-token count, so controller cadence is a pure function of
+        position — identical whether a prefix was shared or re-prefilled.
+        Rows ``>= n_valid`` (ragged final chunk) drop from writes and
+        statistics.
+        """
+        P = entry["k_m"].shape[1]
+        n_pages = entry["k_m"].shape[0]
+        bt = entry["bt"]
+        B, nblocks = bt.shape
+        Wp = entry["pos"].shape[1]
+        C = k_new.shape[1]
+        idx = jnp.arange(C, dtype=jnp.int32)
+        pos = p0[:, None] + idx[None, :]                     # [B, C]
+        keep = idx[None, :] < n_valid[:, None]               # [B, C]
+        blk = jnp.clip(pos // P, 0, nblocks - 1)
+        off = pos % P
+        pages = jnp.take_along_axis(bt, blk, axis=1)         # [B, C]
+        bidx = jnp.arange(B)[:, None]
+        wpg = jnp.where(keep, pages, n_pages)
+        wrow = jnp.where(keep, pos, Wp)
+
+        out = dict(entry)
+        if self.cfg is None:
+            out["k_m"] = entry["k_m"].at[wpg, off].set(k_new, mode="drop")
+            out["v_m"] = entry["v_m"].at[wpg, off].set(v_new, mode="drop")
+            out["pos"] = entry["pos"].at[bidx, wrow].set(pos, mode="drop")
+            return out
+
+        cfg = self.cfg
+        key_k = key_v = det = None
+        if cfg.stochastic:
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(entry["key"])
+            key_k, key_v, out["key"] = ks[:, 0], ks[:, 1], ks[:, 2]
+            det = p0 == 0      # admission chunks round deterministically
+
+        fresh_row = keep & (blk * P >= p0[:, None])
+        wfr = jnp.where(fresh_row, pages, n_pages).ravel()
+        fresh_pg = jnp.zeros((n_pages,), bool).at[wfr].set(True, mode="drop")
+
+        def _cal(x, e_old):
+            rmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(2, 3))
+            pmax = jnp.zeros((n_pages,), jnp.float32).at[wfr].max(
+                rmax.ravel(), mode="drop")
+            return jnp.where(fresh_pg,
+                             calibrate_exp(pmax, cfg.width, cfg.margin_bits),
+                             e_old)
+
+        k_e = _cal(k_new, entry["k_e"])
+        v_e = _cal(v_new, entry["v_e"])
+        k_m, rst_k = _pack_paged_rows(k_new, cfg.width, k_e[pages], keep,
+                                      key_k, det)
+        v_m, rst_v = _pack_paged_rows(v_new, cfg.width, v_e[pages], keep,
+                                      key_v, det)
+        k_buf = entry["k_m"].at[wpg, off].set(k_m, mode="drop")
+        v_buf = entry["v_m"].at[wpg, off].set(v_m, mode="drop")
+        out["pos"] = entry["pos"].at[bidx, wrow].set(pos, mode="drop")
+
+        wpg_f = wpg.ravel()
+        acc_k = jnp.where(fresh_pg[:, None], 0.0, entry["acc_k"]) \
+            .at[wpg_f].add(rst_k.reshape(-1, 3), mode="drop")
+        acc_v = jnp.where(fresh_pg[:, None], 0.0, entry["acc_v"]) \
+            .at[wpg_f].add(rst_v.reshape(-1, 3), mode="drop")
+        out["tot_k"] = jnp.where(fresh_pg[:, None], 0.0, entry["tot_k"]) \
+            .at[wpg_f].add(rst_k.reshape(-1, 3), mode="drop")
+        out["tot_v"] = jnp.where(fresh_pg[:, None], 0.0, entry["tot_v"]) \
+            .at[wpg_f].add(rst_v.reshape(-1, 3), mode="drop")
+        pf0 = p0.astype(jnp.float32)
+        nv = n_valid.astype(jnp.float32)
+        out["n_app"] = pf0 + nv
+
+        interval = float(cfg.update_interval)
+        cross = (jnp.floor((pf0 + nv) / interval)
+                 > jnp.floor(pf0 / interval)) & (n_valid > 0)
+        last_blk = jnp.clip((p0 + n_valid - 1) // P, 0, nblocks - 1)
+        tail_pg = jnp.take_along_axis(bt, last_blk[:, None], axis=1)[:, 0]
+        apply = jnp.zeros((n_pages,), bool).at[
+            jnp.where(cross, tail_pg, n_pages)].set(True, mode="drop")
+        st = controller_step(
+            ScaleState(exps={"k": k_e, "v": v_e},
+                       acc={"k": acc_k, "v": acc_v}),
+            max_overflow_rate=cfg.max_overflow_rate, apply=apply)
+        out["k_e"], out["v_e"] = st.exps["k"], st.exps["v"]
+        out["acc_k"], out["acc_v"] = st.acc["k"], st.acc["v"]
+        de_k = out["k_e"] - k_e
+        de_v = out["v_e"] - v_e
+        out["k_m"], out["v_m"] = jax.lax.cond(
+            jnp.any(de_k != 0.0) | jnp.any(de_v != 0.0),
+            lambda a: (_rescale(a[0], de_k, cfg.width),
+                       _rescale(a[1], de_v, cfg.width)),
+            lambda a: a, (k_buf, v_buf))
+        return out
+
+    # -- pool construction (full [n, B, ...] shapes, outside the scan) ----
+    def init_like(self, raw: dict, n_pages: int) -> dict:
+        """Paged zero-entry matching a raw ``{"k","v","pos"}`` entry."""
+        n, B, W, K, hd = raw["k"].shape
+        P = self.page_size
+        nblocks = -(-W // P)
+        dtype = (jnp.float32 if self.cfg is None
+                 else container_dtype(self.cfg.width))
+        entry = {
+            "k_m": jnp.zeros((n, n_pages, P, K, hd), dtype),
+            "v_m": jnp.zeros((n, n_pages, P, K, hd), dtype),
+            "bt": jnp.zeros((n, B, nblocks), jnp.int32),
+            "pos": jnp.full((n, B, nblocks * P), -1, jnp.int32),
+        }
+        if self.cfg is not None:
+            entry.update({
+                "k_e": jnp.zeros((n, n_pages), jnp.float32),
+                "v_e": jnp.zeros((n, n_pages), jnp.float32),
+                "acc_k": jnp.zeros((n, n_pages, 3), jnp.float32),
+                "acc_v": jnp.zeros((n, n_pages, 3), jnp.float32),
+                "tot_k": jnp.zeros((n, n_pages, 3), jnp.float32),
+                "tot_v": jnp.zeros((n, n_pages, 3), jnp.float32),
+                "n_app": jnp.zeros((n, B), jnp.float32),
+            })
+            if self.cfg.stochastic:
+                entry["key"] = jnp.zeros((n, B, 2), jnp.uint32)
+        return entry
+
+
+def make_paged_pool(cfg: T.ModelConfig, max_slots: int, max_len: int,
+                    codec: PagedKVCodec,
+                    n_pages: Optional[int] = None) -> dict:
+    """Zero paged pool: ``init_cache`` with attn entries re-laid as pages.
+
+    ``n_pages`` defaults to full residency (every slot can map its whole
+    ``max_len`` ring) **plus** the null page; a smaller page budget is
+    legal — the allocator recycles freed and evicted pages — and turns
+    exhaustion into a ``RuntimeError`` instead of silent corruption.
+    Non-attention entries (none in the dense family the paged engine
+    accepts) pass through slot-major.
+    """
+    raw = T.init_cache(cfg, max_slots, max_len)
+    P = codec.page_size
+    caps = {e["k"].shape[2] for sc in raw.values() for e in sc.values()
+            if is_attn_entry(e)}
+    if len(caps) > 1:
+        raise ValueError(f"paged pool needs one ring cap, got {caps} "
+                         "(windowed attention is not paged)")
+    nblocks = -(-max(caps) // P) if caps else 0
+    if n_pages is None:
+        n_pages = 1 + max_slots * nblocks
+    return {sname: {bkey: codec.init_like(e, n_pages) if is_attn_entry(e)
+                    else e for bkey, e in sc.items()}
+            for sname, sc in raw.items()}
+
+
+# -- jitted pool ops (engine-driven admission / sharing / copy-on-write) --
+def reset_slot(pool: dict, slot, shared_len, bt_row: Array,
+               n_app0) -> dict:
+    """Re-admit ``slot``: block-table row, position reset, counter seed.
+
+    ``bt_row`` [nblocks] carries the allocator's mapping (shared prefix
+    pages first, null elsewhere); positions ``< shared_len`` are marked
+    live (the shared pages already hold those rows), the rest empty.
+    Jit-safe — ``slot``/``shared_len``/``n_app0`` may be traced.
+    """
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            if is_paged_entry(e):
+                e = dict(e)
+                Wp = e["pos"].shape[2]
+                iota = jnp.arange(Wp, dtype=jnp.int32)
+                e["pos"] = e["pos"].at[:, slot].set(
+                    jnp.where(iota < shared_len, iota, -1))
+                e["bt"] = e["bt"].at[:, slot].set(
+                    bt_row.astype(jnp.int32))
+                if "n_app" in e:
+                    e["n_app"] = e["n_app"].at[:, slot].set(
+                        jnp.asarray(n_app0, jnp.float32))
+            new_sc[bkey] = e
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def cow_page(pool: dict, src, dst) -> dict:
+    """Copy page ``src`` onto ``dst`` in every layer of every paged entry.
+
+    The copy-on-write fork: mantissas, the page exponent, and the page's
+    controller/cumulative statistics all move, so the fork continues
+    exactly where the shared page's writer left off.
+    """
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            if is_paged_entry(e):
+                e = dict(e)
+                for f in ("k_m", "v_m", "k_e", "v_e",
+                          "acc_k", "acc_v", "tot_k", "tot_v"):
+                    if f in e:
+                        e[f] = e[f].at[:, dst].set(e[f][:, src])
+            new_sc[bkey] = e
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def set_block(pool: dict, slot, block, page) -> dict:
+    """Point ``slot``'s logical ``block`` at physical ``page`` (all layers)."""
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            if is_paged_entry(e):
+                e = dict(e)
+                e["bt"] = e["bt"].at[:, slot, block].set(
+                    jnp.asarray(page, jnp.int32))
+            new_sc[bkey] = e
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def slice_slot(pool: dict, slot) -> dict:
+    """One-slot view for the chunked-prefill jit.
+
+    Per-slot leaves (block table, positions, counters, PRNG keys) slice
+    to ``[n, 1, ...]``; the page arenas pass through whole — the chunk's
+    scatter-writes land in global pages, so no per-slot copy exists to
+    slice.  Non-paged entries slice on axis 1 wholesale (the slot-major
+    layout).
+    """
+    def _one(a):
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            if is_paged_entry(e):
+                new_sc[bkey] = {f: (_one(a) if f in _SLOT_KEYS else a)
+                                for f, a in e.items()}
+            else:
+                new_sc[bkey] = jax.tree_util.tree_map(_one, e)
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def merge_slot(pool: dict, sub: dict, slot) -> dict:
+    """Merge a :func:`slice_slot` view back after a chunk ran on it.
+
+    Per-slot leaves update the slot's row; page-arena leaves *replace*
+    the pool's (the sliced run scatter-wrote the global pages in place).
+    """
+    def _upd(dst, src):
+        return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, axis=1)
+
+    new_pool = {}
+    for sname, sc in pool.items():
+        new_sc = {}
+        for bkey, e in sc.items():
+            s = sub[sname][bkey]
+            if is_paged_entry(e):
+                new_sc[bkey] = {f: (_upd(e[f], s[f]) if f in _SLOT_KEYS
+                                    else s[f]) for f in e}
+            else:
+                new_sc[bkey] = jax.tree_util.tree_map(_upd, e, s)
+        new_pool[sname] = new_sc
+    return new_pool
+
+
+def page_nbytes(pool: dict) -> int:
+    """HBM bytes of ONE page across every layer of every paged entry.
+
+    Counts the mantissa rows plus the per-page exponent/statistic scalars
+    — the marginal cost of mapping one more page, which × the
+    allocator's ``peak_pages`` is the pool's true working set (the
+    number the memory-regression bench rows record).
+    """
+    total = 0
+    for sc in pool.values():
+        for e in sc.values():
+            if not is_paged_entry(e):
+                continue
+            n_pages = e["k_m"].shape[1]
+            for f in ("k_m", "v_m", "k_e", "v_e",
+                      "acc_k", "acc_v", "tot_k", "tot_v"):
+                if f in e:
+                    total += e[f].nbytes // n_pages
+    return total
+
+
+def slot_nbytes(pool: dict) -> int:
+    """HBM bytes ONE slot permanently reserves in a slot-major pool."""
+    total = 0
+    for sc in pool.values():
+        for e in sc.values():
+            if not is_attn_entry(e) or is_paged_entry(e):
+                continue
+            B = e["pos"].shape[1]
+            for f in ("k", "v", "k_m", "v_m", "k_e", "v_e", "pos",
+                      "acc_k", "acc_v", "tot_k", "tot_v", "n_app"):
+                if f in e:
+                    total += e[f].nbytes // B
+    return total
+
+
+class PageAllocator:
+    """Host-side page bookkeeping: free list, refcounts, prefix index.
+
+    The allocator never touches device arrays — it decides, the engine
+    applies through the jitted pool ops.  Page ids are ``1..n_pages-1``
+    (0 is the null page).  Invariants:
+
+    * ``rc[p] >= 1`` while any block table maps ``p``; the prefix index
+      holds one extra pin on every registered page;
+    * a page with ``rc > 1`` is **shared** and immutable — the engine
+      must :meth:`ensure_block` before any write, which forks a private
+      copy (copy-on-write) or maps a fresh page for a new block;
+    * eviction only unpins index-registered pages nobody maps
+      (``rc == 1``), oldest registration first.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, nblocks: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.nblocks = nblocks
+        self._free = list(range(n_pages - 1, 0, -1))     # pop() -> 1, 2, ...
+        self.rc = np.zeros(n_pages, np.int32)
+        self.bt: dict = {}                               # slot -> [nblocks]
+        self._index: dict = {}                           # digest -> page
+        self._rev: dict = {}                             # page -> digest
+        self._order: List[str] = []                      # registration FIFO
+        self.peak_pages = 0
+        self.hits = 0                                    # prefix page hits
+        self.cow_forks = 0
+        self.evictions = 0
+        self.allocs = 0
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    # -- allocation -------------------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            self._evict_one()
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.n_pages - 1} pages, "
+                f"{len(self._index)} registered prefixes all still mapped)")
+        p = self._free.pop()
+        self.rc[p] = 1
+        self.allocs += 1
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return p
+
+    def _release(self, p: int) -> None:
+        self.rc[p] = 0
+        self._free.append(p)
+
+    def decref(self, p: int) -> None:
+        self.rc[p] -= 1
+        if self.rc[p] == 0:
+            self._free.append(p)
+
+    def _evict_one(self) -> None:
+        """Unpin the oldest registered prefix page nobody maps."""
+        for d in self._order:
+            p = self._index[d]
+            if self.rc[p] == 1:                          # index pin only
+                self._order.remove(d)
+                del self._index[d]
+                del self._rev[p]
+                self._release(p)
+                self.evictions += 1
+                return
+
+    # -- per-slot block tables -------------------------------------------
+    def new_slot(self, slot: int, mapped: List[int]) -> np.ndarray:
+        """Open ``slot`` with ``mapped`` prefix pages; returns the bt row."""
+        row = np.zeros(self.nblocks, np.int32)
+        row[:len(mapped)] = mapped
+        self.bt[slot] = row
+        return row
+
+    def free_slot(self, slot: int) -> None:
+        for p in self.bt.pop(slot, []):
+            if p:
+                self.decref(int(p))
+
+    def ensure_block(self, slot: int, block: int) -> Optional[Tuple]:
+        """Make ``slot``'s ``block`` writable before a step touches it.
+
+        Returns ``None`` (already private), ``("alloc", 0, page)`` (a
+        fresh page was mapped), or ``("cow", src, dst)`` (a shared page
+        was forked — the engine must copy ``src → dst`` on device).
+        """
+        page = int(self.bt[slot][block])
+        if page == 0:
+            p = self.alloc()
+            self.bt[slot][block] = p
+            return ("alloc", 0, p)
+        if self.rc[page] > 1:
+            dst = self.alloc()
+            self.rc[page] -= 1
+            self.bt[slot][block] = dst
+            self.cow_forks += 1
+            return ("cow", page, dst)
+        return None
+
+    # -- prompt-prefix sharing -------------------------------------------
+    @staticmethod
+    def _page_bytes(tokens, i: int, P: int) -> bytes:
+        return np.asarray(tokens[i * P:(i + 1) * P], np.int64).tobytes()
+
+    def match_prefix(self, tokens) -> Tuple[List[int], int]:
+        """Longest registered page-prefix of ``tokens``; increfs the hits.
+
+        Returns ``(pages, shared_len)``.  ``shared_len`` is capped at
+        ``len(tokens) - 1`` — at least one prompt token must run through
+        the model to produce the first logits — so a fully-registered
+        prompt keeps its last matched page mapped but re-computes (and
+        copy-on-write rewrites) its final row.
+        """
+        P = self.page_size
+        L = len(tokens)
+        h = hashlib.sha1()
+        pages: List[int] = []
+        for i in range(L // P):
+            h.update(self._page_bytes(tokens, i, P))
+            p = self._index.get(h.hexdigest())
+            if p is None:
+                break
+            pages.append(p)
+        shared_len = min(len(pages) * P, L - 1)
+        for p in pages:
+            self.rc[p] += 1
+        self.hits += len(pages)
+        return pages, shared_len
+
+    def register_prefix(self, slot: int, tokens) -> int:
+        """Index ``slot``'s full prompt pages for future admissions.
+
+        Called once the prompt is fully stored (final prefill chunk).
+        Each newly-registered page gains the index pin; already-known
+        digests keep their existing page.  Returns #pages registered.
+        """
+        P = self.page_size
+        h = hashlib.sha1()
+        n = 0
+        for i in range(len(tokens) // P):
+            h.update(self._page_bytes(tokens, i, P))
+            d = h.hexdigest()
+            if d in self._index:
+                continue
+            p = int(self.bt[slot][i])
+            if p == 0:
+                break
+            self._index[d] = p
+            self._rev[p] = d
+            self._order.append(d)
+            self.rc[p] += 1
+            n += 1
+        return n
+
+    def stats(self) -> dict:
+        return {
+            "page_cache_hits": self.hits,
+            "page_cow_forks": self.cow_forks,
+            "page_evictions": self.evictions,
+            "pages_allocated": self.allocs,
+            "pages_in_use": self.pages_in_use,
+            "pages_in_use_peak": self.peak_pages,
+            "pages_registered": len(self._index),
+        }

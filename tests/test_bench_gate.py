@@ -8,8 +8,9 @@ from benchmarks.check_regression import compare, main, merge_min
 
 def _payload(rows, tiny=True):
     return {"meta": {"backend": "cpu", "tiny": tiny},
-            "rows": [{"name": n, "us_per_call": us, "derived": 1.0}
-                     for n, us in rows]}
+            "rows": [{"name": r[0], "us_per_call": r[1], "derived": 1.0,
+                      "kind": r[2] if len(r) > 2 else "time"}
+                     for r in rows]}
 
 
 BASE = _payload([("a_jnp", 100.0), ("a_fused", 120.0),
@@ -79,6 +80,42 @@ def test_merge_min_takes_per_row_floor(tmp_path):
     vals = {r["name"]: r["us_per_call"] for r in merged["rows"]}
     assert vals["a_fused"] == 120.0             # spike cancelled
     assert vals["c"] == 800.0
+
+
+MEM_BASE = _payload([("a_jnp", 100.0), ("a_fused", 120.0), ("c", 400.0),
+                     ("mem_int8_paged", 4096.0, "mem"),
+                     ("mem_int8_slot", 8192.0, "mem")])
+
+
+def test_mem_rows_gate_on_direct_ratio():
+    """kind=mem rows are byte counts: a 3x-slower machine leaves them
+    unchanged (pass), but bytes/request growing past the band fails even
+    when every timing row is clean."""
+    rows = [("a_jnp", 300.0), ("a_fused", 360.0), ("c", 1200.0),
+            ("mem_int8_paged", 4096.0, "mem"), ("mem_int8_slot", 8192.0,
+                                                "mem")]
+    assert compare(MEM_BASE, _payload(rows)) == []
+    rows[3] = ("mem_int8_paged", 4096.0 * 1.3, "mem")   # >25% more bytes
+    problems = compare(MEM_BASE, _payload(rows))
+    assert len(problems) == 1 and "memory regression" in problems[0]
+    assert "mem_int8_paged" in problems[0]
+    assert compare(MEM_BASE, _payload(rows), mem_tolerance=0.5) == []
+
+
+def test_mem_rows_excluded_from_time_median():
+    """Two mem rows at ratio 1.0 must not drag the median under a uniform
+    timing slowdown (3 time rows at 3x + 2 mem rows at 1x: a mem-counting
+    median would flag every time row)."""
+    rows = [("a_jnp", 300.0), ("a_fused", 360.0), ("c", 1200.0),
+            ("mem_int8_paged", 4096.0, "mem"),
+            ("mem_int8_slot", 8192.0, "mem")]
+    assert compare(MEM_BASE, _payload(rows)) == []
+
+
+def test_mem_row_missing_fails():
+    fresh = _payload([("a_jnp", 100.0), ("a_fused", 120.0), ("c", 400.0),
+                      ("mem_int8_slot", 8192.0, "mem")])
+    assert "missing row: mem_int8_paged" in compare(MEM_BASE, fresh)
 
 
 @pytest.mark.parametrize("regress", [False, True])

@@ -1,0 +1,400 @@
+"""Paged KV pool: codec round-trip, copy-on-write isolation, allocator
+refcounts, block-table kernels vs jitted refs, paged-vs-slot engine parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import PrecisionPolicy
+from repro.kernels.attn import ref as AR
+from repro.kernels.attn.ops import flash_decode_paged, flash_prefill_paged
+from repro.models import transformer as T
+from repro.serve import CacheQuantConfig, ServeEngine, kv_pool, paged
+
+SCALE = 0.3
+
+
+# ---------------------------------------------------------------------------
+# codec-level helpers (one layer, no model)
+# ---------------------------------------------------------------------------
+
+def _entry(width, key, *, P=4, nblocks=3, B=2, K=2, hd=4, n_pages=None,
+           fill_blocks=None, n_valid_last=None):
+    """Paged entry filled through ``append_chunk`` (chunk size == P).
+
+    Slot ``b`` maps pages ``1 + b*nblocks ..`` for its first
+    ``fill_blocks`` blocks; returns ``(entry, k_vals, v_vals, codec)``
+    with the f32 values that were quantized in.
+    """
+    qcfg = None if width is None else CacheQuantConfig(width=width)
+    codec = paged.PagedKVCodec(P, qcfg)
+    W = nblocks * P
+    n_pages = n_pages or 1 + B * nblocks
+    fill_blocks = nblocks if fill_blocks is None else fill_blocks
+    raw = {"k": jnp.zeros((1, B, W, K, hd), jnp.float32),
+           "v": jnp.zeros((1, B, W, K, hd), jnp.float32),
+           "pos": jnp.full((1, B, W), -1, jnp.int32)}
+    e = jax.tree_util.tree_map(lambda a: a[0], codec.init_like(raw, n_pages))
+    bt = np.zeros((B, nblocks), np.int32)
+    for b in range(B):
+        bt[b, :fill_blocks] = 1 + b * nblocks + np.arange(fill_blocks)
+    e["bt"] = jnp.asarray(bt)
+    kk, kv = jax.random.split(key)
+    k_vals = jax.random.normal(kk, (B, W, K, hd), jnp.float32) * 0.5
+    v_vals = jax.random.normal(kv, (B, W, K, hd), jnp.float32) * 0.5
+    for c in range(fill_blocks):
+        nv = P if (n_valid_last is None or c < fill_blocks - 1) \
+            else n_valid_last
+        e = codec.append_chunk(e, k_vals[:, c * P:(c + 1) * P],
+                               v_vals[:, c * P:(c + 1) * P],
+                               jnp.full((B,), c * P, jnp.int32),
+                               jnp.full((B,), nv, jnp.int32))
+    return e, k_vals, v_vals, codec
+
+
+def _wrap(e):
+    """Entry → single-layer pool (the layer dim the pool ops expect)."""
+    return {"blk": {"attn": jax.tree_util.tree_map(lambda a: a[None], e)}}
+
+
+def _unwrap(pool):
+    return jax.tree_util.tree_map(lambda a: a[0], pool["blk"]["attn"])
+
+
+# ---------------------------------------------------------------------------
+# page-granular pack/append round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [8, 16])
+def test_paged_append_roundtrip(width):
+    """Chunk appends quantize against per-PAGE exponents; dequantized
+    values come back within half a step, ragged tail rows stay empty."""
+    P, nblocks = 4, 3
+    e, k_vals, _, codec = _entry(width, jax.random.PRNGKey(0), P=P,
+                                 nblocks=nblocks, n_valid_last=2)
+    k, v, pos = codec.load(e)
+    pos = np.asarray(pos)
+    valid = pos >= 0
+    assert valid.sum(axis=1).tolist() == [(nblocks - 1) * P + 2] * 2
+    # logical row r lives on page bt[b, r//P]: its step is that page's
+    ke = np.asarray(jnp.take(e["k_e"], e["bt"], axis=0))   # [B, nblocks]
+    step = np.repeat(2.0 ** ke, P, axis=1)[..., None, None]
+    err = np.abs(np.asarray(k) - np.asarray(k_vals)) * valid[..., None, None]
+    assert np.all(err <= step / 2 + 1e-7)
+    # every kept row's K and V landed in the per-page §5 counters
+    tot = float(jnp.sum(e["tot_k"][..., 2]) + jnp.sum(e["tot_v"][..., 2]))
+    assert tot > 0
+    assert float(jnp.sum(e["tot_k"][..., 0])) <= float(
+        jnp.sum(e["tot_k"][..., 2]))
+    # the null page is never written
+    assert not np.any(np.asarray(e["k_m"][0]))
+
+
+def test_paged_f32_roundtrip_exact():
+    e, k_vals, v_vals, codec = _entry(None, jax.random.PRNGKey(1))
+    k, v, _ = codec.load(e)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(k_vals))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_vals))
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write isolation
+# ---------------------------------------------------------------------------
+
+def test_cow_fork_leaves_sharer_bytes_untouched():
+    """Slot 1 shares slot 0's pages mid-page, forks the tail page, and
+    writes on: the shared page's mantissas/exponent/stats stay
+    bit-identical and slot 0 reads exactly what it read before."""
+    P, nblocks = 4, 3
+    e, _, _, codec = _entry(8, jax.random.PRNGKey(2), P=P, nblocks=nblocks,
+                            n_pages=12, fill_blocks=2)
+    k0_before = np.asarray(codec.load(e)[0][0])      # slot 0's view
+    page2 = {f: np.asarray(e[f][2]) for f in
+             ("k_m", "v_m", "acc_k", "acc_v", "tot_k", "tot_v")}
+    e2_before = (float(e["k_e"][2]), float(e["v_e"][2]))
+
+    pool = _wrap(e)
+    # slot 1 shares rows 0..5: page 1 whole, page 2 rows 4,5 (mid-page)
+    pool = paged.reset_slot(pool, 1, 6, jnp.asarray([1, 2, 0], jnp.int32),
+                            6.0)
+    # fork the shared tail page before writing row 6, map a fresh block 2
+    pool = paged.cow_page(pool, 2, 8)
+    pool = paged.set_block(pool, 1, 1, 8)
+    pool = paged.set_block(pool, 1, 2, 9)
+    e = _unwrap(pool)
+    kn = jax.random.normal(jax.random.PRNGKey(3), (2, P, 2, 4)) * 0.5
+    e = codec.append_chunk(e, kn, kn, jnp.asarray([0, 6], jnp.int32),
+                           jnp.asarray([0, P], jnp.int32))
+
+    for f, before in page2.items():                  # sharer's bytes
+        np.testing.assert_array_equal(np.asarray(e[f][2]), before)
+    assert (float(e["k_e"][2]), float(e["v_e"][2])) == e2_before
+    np.testing.assert_array_equal(np.asarray(codec.load(e)[0][0]), k0_before)
+    # the fork carried the shared rows and took the new ones
+    np.testing.assert_array_equal(np.asarray(e["k_m"][8][:2]),
+                                  page2["k_m"][:2])
+    assert not np.array_equal(np.asarray(e["k_m"][8][2:]), page2["k_m"][2:])
+    # continuation rule: the forked mid-page kept the donor's exponent
+    assert float(e["k_e"][8]) == e2_before[0]
+
+
+# ---------------------------------------------------------------------------
+# metrics walk the block table (shared page counts ONCE)
+# ---------------------------------------------------------------------------
+
+def test_overflow_summary_counts_shared_page_once():
+    e, _, _, _ = _entry(8, jax.random.PRNGKey(4), fill_blocks=2)
+    # slot 1 drops its own pages and maps slot 0's two written pages
+    e["bt"] = jnp.asarray([[1, 2, 0], [1, 2, 0]], jnp.int32)
+    pool = _wrap(e)
+    per_page = np.asarray(e["tot_k"][..., 2]) + np.asarray(e["tot_v"][..., 2])
+    expect = float(per_page[1] + per_page[2])        # pages 1,2 once each
+    got = kv_pool.overflow_summary(pool, np.array([True, True]))
+    assert got["cache_appends_quantized"] == pytest.approx(expect)
+    # per-REQUEST totals still see the shared pages for each mapper
+    t0 = np.asarray(kv_pool.slot_totals(pool, 0))
+    t1 = np.asarray(kv_pool.slot_totals(pool, 1))
+    np.testing.assert_allclose(t0, t1)
+    assert t0[2] == pytest.approx(expect)
+    # inactive slots drop out of the summary
+    got0 = kv_pool.overflow_summary(pool, np.array([True, False]))
+    assert got0["cache_appends_quantized"] == pytest.approx(expect)
+    gotn = kv_pool.overflow_summary(pool, np.array([False, False]))
+    assert gotn["cache_appends_quantized"] == 0.0
+
+
+def test_overflow_summary_paged_f32_is_zero():
+    e, _, _, _ = _entry(None, jax.random.PRNGKey(5))
+    got = kv_pool.overflow_summary(_wrap(e), np.array([True, True]))
+    assert got["cache_appends_quantized"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts, prefix index, eviction, churn
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcount_free_reuse_churn():
+    P, nblocks = 4, 4
+    al = paged.PageAllocator(n_pages=10, page_size=P, nblocks=nblocks)
+    toks = np.arange(8, dtype=np.int32)
+
+    al.new_slot(0, [])
+    first = []
+    for b in range(2):
+        kind, _, pg = al.ensure_block(0, b)
+        assert kind == "alloc"
+        first.append(pg)
+    al.register_prefix(0, toks)                      # pins both pages
+    al.free_slot(0)
+    assert al.stats()["pages_registered"] == 2
+    assert al.stats()["pages_in_use"] == 2           # pinned, not leaked
+
+    # identical prompt: both pages hit; the L-1 cap forces a tail COW
+    pages, shared = al.match_prefix(toks)
+    assert pages == first and shared == 7
+    al.new_slot(1, pages)
+    act = al.ensure_block(1, 1)                      # writes row 7
+    assert act is not None and act[0] == "cow" and act[1] == first[1]
+    fork = act[2]
+    assert fork not in first
+    assert al.ensure_block(1, 1) is None             # now privately owned
+    al.free_slot(1)
+    assert al.stats()["page_cache_hits"] == 2
+    assert al.stats()["page_cow_forks"] == 1
+
+    # churn distinct prompts through one slot until eviction recycles the
+    # registered pages; the arena never exceeds its budget
+    seen = set(first)
+    for i in range(12):
+        t = (100 * (i + 1) + np.arange(8)).astype(np.int32)
+        pages, shared = al.match_prefix(t)
+        assert pages == [] and shared == 0
+        al.new_slot(0, pages)
+        for b in range(2):
+            _, _, pg = al.ensure_block(0, b)
+            seen.add(pg)
+        al.register_prefix(0, t)
+        al.free_slot(0)
+        st = al.stats()
+        assert st["pages_in_use"] <= 9               # null page excluded
+        assert st["pages_in_use_peak"] <= 9
+    assert al.stats()["page_evictions"] > 0
+    assert len(seen) <= 9                            # freed ids were reused
+
+
+def test_allocator_exhaustion_raises():
+    al = paged.PageAllocator(n_pages=3, page_size=4, nblocks=4)
+    al.new_slot(0, [])
+    al.ensure_block(0, 0)
+    al.ensure_block(0, 1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.ensure_block(0, 2)
+
+
+# ---------------------------------------------------------------------------
+# fused kernels: bit-equality vs the jitted refs through the gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [None, 8, 16])
+def test_flash_decode_paged_bitwise(width):
+    B, K, G, hd, P, nblocks = 2, 2, 2, 4, 4, 3
+    e, _, _, _ = _entry(width, jax.random.PRNGKey(6), P=P, nblocks=nblocks,
+                        K=K, hd=hd, n_valid_last=3)
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, K, G, hd), jnp.float32)
+    qpos = jnp.full((B,), (nblocks - 1) * P + 3, jnp.int32)
+    ref = jax.jit(lambda *a: AR.paged_decode_attention_ref(
+        *a, k_exp=e.get("k_e"), v_exp=e.get("v_e"), width=width,
+        scale=SCALE, window=None, causal=True))(
+            q, e["k_m"], e["v_m"], e["bt"], e["pos"], qpos)
+    out = flash_decode_paged(q, e["k_m"], e["v_m"], e["bt"], e["pos"], qpos,
+                             e.get("k_e"), e.get("v_e"), width=width,
+                             scale=SCALE)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # the per-page split path (one grid step per block) stays close
+    split = flash_decode_paged(q, e["k_m"], e["v_m"], e["bt"], e["pos"],
+                               qpos, e.get("k_e"), e.get("v_e"), width=width,
+                               scale=SCALE, force_split=True)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("width", [None, 8])
+def test_flash_prefill_paged_bitwise(width):
+    B, K, G, hd, P, nblocks, C = 2, 2, 2, 4, 4, 3, 4
+    e, _, _, _ = _entry(width, jax.random.PRNGKey(8), P=P, nblocks=nblocks,
+                        K=K, hd=hd, fill_blocks=1)
+    kq, kn, vn = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(kq, (B, C, K, G, hd), jnp.float32)
+    k_new = jax.random.normal(kn, (B, C, K, hd), jnp.float32) * 0.5
+    v_new = jax.random.normal(vn, (B, C, K, hd), jnp.float32) * 0.5
+    p0 = jnp.full((B,), P, jnp.int32)
+    nv = jnp.asarray([C, 3], jnp.int32)              # ragged final chunk
+    ref = jax.jit(lambda *a: AR.paged_prefill_attention_ref(
+        *a, k_exp=e.get("k_e"), v_exp=e.get("v_e"), width=width,
+        scale=SCALE, window=None, causal=True))(
+            q, e["k_m"], e["v_m"], e["bt"], e["pos"], k_new, v_new, p0, nv)
+    out = flash_prefill_paged(q, k_new, v_new, e["k_m"], e["v_m"], e["bt"],
+                              e["pos"], p0, nv, e.get("k_e"), e.get("v_e"),
+                              width=width, scale=SCALE)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    split = flash_prefill_paged(q, k_new, v_new, e["k_m"], e["v_m"],
+                                e["bt"], e["pos"], p0, nv, e.get("k_e"),
+                                e.get("v_e"), width=width, scale=SCALE,
+                                force_split=True)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine parity + sharing (smoke model)
+# ---------------------------------------------------------------------------
+
+P_ENG = 8          # page size == prefill chunk: matched quantize-on-write
+MAXLEN = 32        # multiple of P_ENG so paged Wp == slot-major W
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("llama3_8b")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prompts(model):
+    cfg, _ = model
+    shared = (np.arange(1, 17) % cfg.vocab_size).astype(np.int32)  # 2 pages
+    pa = np.concatenate([shared, [17, 18, 19, 20]]).astype(np.int32)
+    pb = np.concatenate([shared, [31, 32, 33, 34]]).astype(np.int32)
+    return pa, pb
+
+
+def _mk(model, *, bits=0, fused=False, page=True, slots=2, n_pages=None,
+        cache_cfg=None):
+    cfg, params = model
+    pol = PrecisionPolicy("dfxp", fused_decode=fused, prefill_chunk=P_ENG,
+                          page_size=P_ENG if page else 0)
+    return ServeEngine(cfg, pol, params, max_slots=slots, max_len=MAXLEN,
+                       cache_bits=bits, cache_cfg=cache_cfg, n_pages=n_pages)
+
+
+def _run(eng, prompts, max_new=6):
+    uids = [eng.submit(p, max_new=max_new) for p in prompts]
+    out = eng.run()
+    return [out[u] for u in uids]
+
+
+@pytest.mark.parametrize("bits,fused", [(0, False), (0, True), (8, False),
+                                        (8, True), (16, False), (16, True)])
+def test_paged_matches_slot_major_greedy(model, prompts, bits, fused):
+    """Greedy token streams are identical paged-vs-slot-major for
+    f32/int8/int16 pools, fused and unfused."""
+    ref = _run(_mk(model, bits=bits, fused=fused, page=False), prompts)
+    out = _run(_mk(model, bits=bits, fused=fused, page=True), prompts)
+    for o, r in zip(out, ref):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_prefix_sharing_saves_pages_and_matches_solo(model, prompts):
+    pa, pb = prompts
+    eng = _mk(model, bits=8, fused=True)
+    out = _run(eng, [pa, pb])
+    st = eng.stats()
+    ea = _mk(model, bits=8, fused=True, slots=1)
+    sa = _run(ea, [pa])
+    eb = _mk(model, bits=8, fused=True, slots=1)
+    sb = _run(eb, [pb])
+    np.testing.assert_array_equal(out[0], sa[0])     # shared == solo tokens
+    np.testing.assert_array_equal(out[1], sb[0])
+    assert st["page_cache_hits"] >= 1
+    solo_alloc = ea.stats()["pages_allocated"] + eb.stats()["pages_allocated"]
+    n_shared = 16 // P_ENG                           # the 2 prefix pages
+    assert solo_alloc - st["pages_allocated"] == n_shared
+    solo_chunks = ea.stats()["prefill_chunks"] + eb.stats()["prefill_chunks"]
+    assert st["prefill_chunks"] < solo_chunks
+    assert st["cache_appends_quantized"] > 0         # §5 stats still flow
+
+
+def test_identical_prompts_fork_on_write(model, prompts):
+    """Two identical page-aligned prompts: the L-1 cap leaves one row
+    inside the shared tail page, so the second request's first chunk
+    forks it (copy-on-write); tokens still match exactly."""
+    pa, _ = prompts
+    pa = pa[:16]                  # exactly 2 pages → the cap lands mid-page
+    eng = _mk(model, bits=8, fused=True)
+    out = _run(eng, [pa, pa])
+    np.testing.assert_array_equal(out[0], out[1])
+    st = eng.stats()
+    assert st["page_cache_hits"] >= 1
+    assert st["page_cow_forks"] >= 1
+
+
+def test_paged_stochastic_disables_sharing(model, prompts):
+    """A shared page cannot replay two requests' PRNG chains: sharing is
+    off under stochastic rounding, but paging itself still serves and a
+    request still reproduces its solo tokens."""
+    pa, pb = prompts
+    ccfg = CacheQuantConfig(width=8, stochastic=True)
+    eng = _mk(model, bits=8, fused=True, cache_cfg=ccfg)
+    out = _run(eng, [pa, pb])
+    st = eng.stats()
+    assert st["page_cache_hits"] == 0
+    assert st["pages_registered"] == 0
+    solo = _mk(model, bits=8, fused=True, slots=1, cache_cfg=ccfg)
+    np.testing.assert_array_equal(out[0], _run(solo, [pa])[0])
+
+
+def test_engine_page_budget_exhaustion_raises(model, prompts):
+    pa, _ = prompts
+    eng = _mk(model, slots=1, n_pages=3)             # null + 2 usable pages
+    eng.submit(pa, max_new=6)                        # needs 4 blocks
+    with pytest.raises(RuntimeError, match="exhausted"):
+        eng.run()
+
+
+def test_paged_rejects_non_dense(prompts):
+    cfg = configs.get_smoke("granite_moe_1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pol = PrecisionPolicy("dfxp", page_size=8)
+    with pytest.raises(ValueError, match="dense"):
+        ServeEngine(cfg, pol, params, max_slots=1, max_len=16)
