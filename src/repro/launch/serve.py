@@ -12,6 +12,13 @@ for any prompt length):
       --num-requests 4 --prompt-len 8,16,32 --max-new 16 --cache-bits 8 \
       --fused-decode --prefill-chunk 8
 
+Robustness controls: ``--queue-cap`` (reject-on-full admission),
+``--deadline-ms`` (queued and in-flight expiry), and ``--chaos [SEED]``
+(seeded fault-injection sweep — logit NaNs, KV bit flips, admission
+delays, page squeezes — with the event log printed and optionally
+written to ``--fault-log``).  A per-request status table prints at exit
+either way; see ``repro.serve.engine.RequestStatus``.
+
 ``Engine`` below is the *lockstep reference*: batched prefill, then every
 sequence decodes the same number of steps at one shared position. It frees
 no slots and admits nothing mid-decode — kept (batch is implied by the
@@ -30,7 +37,7 @@ from repro import configs
 from repro.core import ScaleState
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
-from repro.serve import SamplerConfig, ServeEngine
+from repro.serve import FaultHarness, SamplerConfig, ServeEngine, chaos_plan
 
 
 class Engine:
@@ -116,6 +123,26 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="admission control: bound the waiting queue; a "
+                         "submit finding it full resolves REJECTED (empty "
+                         "result, terminal status) instead of queueing. "
+                         "0 = unbounded")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline from submit; expired "
+                         "requests (queued or mid-decode) resolve "
+                         "TIMED_OUT with the tokens harvested so far. "
+                         "0 = no deadline")
+    ap.add_argument("--chaos", type=int, nargs="?", const=0, default=None,
+                    metavar="SEED",
+                    help="fault-injection sweep: drive a seeded random mix "
+                         "of logit NaNs, KV bit flips, admission delays, "
+                         "and (paged pools) a page squeeze through the "
+                         "run, then print the fault log. The engine must "
+                         "drain with terminal statuses either way")
+    ap.add_argument("--fault-log", default="",
+                    help="with --chaos: write the harness event log (JSON) "
+                         "to this path")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -127,15 +154,26 @@ def main(argv=None):
     slots = args.slots or min(args.num_requests, 4)
     scfg = SamplerConfig(kind=args.sampler, temperature=args.temperature,
                          top_k=args.top_k if args.sampler == "top_k" else 0)
+    harness = None
+    if args.chaos is not None:
+        harness = FaultHarness(
+            chaos_plan(args.chaos, list(range(args.num_requests)),
+                       n_steps=4 * args.max_new,
+                       squeeze_pages=4 if args.page_size else 0),
+            seed=args.chaos)
     eng = ServeEngine(cfg, policy, params, max_slots=slots,
                       max_len=max(lens) + args.max_new,
                       cache_bits=args.cache_bits, sampler_cfg=scfg,
-                      seed=args.seed)
+                      seed=args.seed,
+                      queue_cap=args.queue_cap or None,
+                      deadline_ms=args.deadline_ms or None,
+                      faults=harness)
+    uids = []
     for i in range(args.num_requests):
         plen = lens[i % len(lens)]
         prompt = jax.random.randint(jax.random.PRNGKey(1000 + i), (plen,), 0,
                                     cfg.vocab_size)
-        eng.submit(prompt, max_new=args.max_new)
+        uids.append(eng.submit(prompt, max_new=args.max_new))
     out = eng.run()
     stats = eng.stats()
     print(f"served {stats['requests_finished']} requests, "
@@ -145,6 +183,18 @@ def main(argv=None):
     print("stats:", json.dumps({k: round(v, 4) if isinstance(v, float) else v
                                 for k, v in stats.items()}))
     print("sample:", out[0][:8].tolist())
+    print(f"{'uid':>5} {'status':>10} {'tokens':>7} {'preempts':>9}")
+    for u in uids:
+        st = eng.status(u)
+        tr = eng.metrics.traces[u]
+        print(f"{u:>5} {st.value if st else '?':>10} {out[u].size:>7} "
+              f"{tr.preempts:>9}")
+    if harness is not None:
+        print("faults:", json.dumps(harness.summary()["event_counts"]))
+        if args.fault_log:
+            with open(args.fault_log, "w") as f:
+                json.dump(harness.summary(), f, indent=2)
+            print(f"fault log written to {args.fault_log}")
     return out
 
 

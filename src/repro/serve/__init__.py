@@ -1,11 +1,21 @@
 """repro.serve — continuous batching over a DFXP-packed KV-cache pool."""
-from .engine import Request, ServeEngine  # noqa: F401
+from .engine import Request, RequestStatus, ServeEngine  # noqa: F401
+from .faults import (  # noqa: F401
+    AdmitDelay,
+    FaultHarness,
+    KVBitFlip,
+    LogitNaN,
+    PageSqueeze,
+    chaos_plan,
+)
 from .kv_pool import (  # noqa: F401
     CacheQuantConfig,
     PackedKVCodec,
     insert,
     make_pool,
     overflow_summary,
+    slot_overflow_rates,
 )
 from .metrics import RequestTrace, ServeMetrics  # noqa: F401
-from .sampler import SamplerConfig, request_key, sample  # noqa: F401
+from .paged import PageAllocator, PagedKVCodec, PageExhausted  # noqa: F401
+from .sampler import SamplerConfig, guard_logits, request_key, sample  # noqa: F401

@@ -31,30 +31,64 @@ Every device computation is fixed-shape and jitted once per shape:
   attention-family models): any queued request is admitted into any free
   slot immediately, and each engine step runs ONE fixed-size prefill
   chunk for the oldest prefilling slot, interleaved with the decode
-  batch.  The chunk jit slices the slot out of the pool (traced slot
-  index, donated pool), runs ``transformer.prefill_chunk_step`` — the
-  chunk attends its slot's already-written history straight off the
-  packed storage (``codec.fused_prefill``, the flash-prefill kernel)
-  and writes its K/V back as int mantissas (``codec.append_chunk``,
-  quantize-on-write; no f32 K/V materializes in either direction) —
-  and scatters the slot back.  Compile count is ONE for the engine's
-  lifetime regardless of prompt lengths (ragged tails are masked
-  in-kernel), and TTFT no longer waits for a same-length partner.
-  While a slot is mid-prefill the decode batch's append is masked off
-  for it (``append_mask``), so its pool row and controller state stay
-  byte-identical to a solo run.  Whole-prompt mode remains the
-  bit-for-bit reference path.
+  batch.  While a slot is mid-prefill the decode batch's append is
+  masked off for it (``append_mask``), so its pool row and controller
+  state stay byte-identical to a solo run.  Whole-prompt mode remains
+  the bit-for-bit reference path.
 
 The KV pool stores K/V float32 (bit-identical to ``transformer.init_cache``)
 or as DFXP-packed int8/int16 mantissas with controller-managed per-slot
 exponents (``cache_bits=8|16``) — halving/quartering cache HBM and hence
 multiplying concurrent slot capacity.
+
+Robustness layer (admission control, preemption, quarantine)
+------------------------------------------------------------
+
+Production serving fails in exactly the ways low-precision numerics make
+survivable *per request* — if the engine can detect, quarantine, and
+recover instead of crashing the batch:
+
+* **admission control** — ``queue_cap`` bounds the queue (submit beyond
+  it resolves the request ``REJECTED``, it never raises);
+  ``deadline_ms`` (engine default, overridable per submit) expires
+  queued *and* in-flight requests to ``TIMED_OUT`` with whatever tokens
+  they harvested.  Every request ends in a terminal
+  :class:`RequestStatus` readable via :meth:`ServeEngine.status`.
+* **preemption under page exhaustion** — when the paged arena runs dry
+  mid-step, the engine picks a victim (the *youngest decoding* request,
+  falling back to the youngest prefilling one), releases its non-shared
+  pages, and requeues it at the front of the queue with its
+  generated-so-far tokens carried as prompt suffix.  Re-admission
+  re-prefills prompt + carry through the chunked-prefill path — prefix
+  caching makes the prompt part free when its pages are still registered
+  — and the sampler keys on ``(seed, uid, absolute position)``, so the
+  resumed stream continues exactly where it left off.  A request
+  preempted more than ``max_preempts`` times resolves ``FAILED`` instead
+  of thrashing; exhaustion with no preemptible sibling resolves the
+  requester ``FAILED``.  ``run()`` never raises for page exhaustion.
+* **numeric sentinels** — every decode/prefill jit guards its logits
+  device-side (``sampler.guard_logits``): a NaN/Inf row flags ``bad``
+  for its slot, harvested with the sampled tokens in the same device
+  sync.  A flagged slot is quarantined ``FAILED`` — its poisoned token
+  dropped, its slot freed and thereby masked out of subsequent appends —
+  while sibling slots' streams are untouched (row independence + masked
+  appends).  ``runaway_ovf`` adds a §5 overflow-rate runaway threshold:
+  slots whose cumulative cache overflow rate exceeds it (the paper's
+  controller has lost the race) quarantine the same way.
+* **drain-timeout** — ``run()`` out of step budget resolves every
+  in-flight request ``TIMED_OUT`` (queued preempted ones ``PREEMPTED``)
+  and returns all harvested tokens instead of raising and discarding
+  them.
+
+Deterministic fault injectors driving all of this live in
+:mod:`repro.serve.faults`.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional
+import enum
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,14 +104,35 @@ from . import kv_pool, metrics, paged, sampler
 Array = jax.Array
 
 
+class RequestStatus(enum.Enum):
+    """Terminal state of a request. The engine resolves every submitted
+    uid to exactly one of these instead of raising mid-drain."""
+
+    OK = "ok"                  # finished: EOS or its max_new budget
+    REJECTED = "rejected"      # admission control: queue was full
+    TIMED_OUT = "timed_out"    # deadline expired / drain ran out of steps
+    PREEMPTED = "preempted"    # evicted for pages, still queued at drain end
+    FAILED = "failed"          # quarantined: NaN/Inf logits, §5 runaway,
+    #                            or page exhaustion with no victim
+
+
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``tokens``: 1-D prompt ids."""
+    """One generation request. ``tokens``: 1-D prompt ids.
+
+    ``deadline`` is an absolute ``time.perf_counter`` stamp (set by the
+    engine from ``deadline_ms``); ``carry`` holds tokens generated
+    before a preemption (they ride along as prompt suffix on requeue and
+    are prepended to the final result); ``n_preempt`` counts evictions.
+    """
 
     uid: int
     tokens: np.ndarray
     max_new: int = 16
     eos_id: Optional[int] = None
+    deadline: Optional[float] = None
+    carry: Tuple[int, ...] = ()
+    n_preempt: int = 0
 
 
 class ServeEngine:
@@ -114,8 +169,28 @@ class ServeEngine:
         PRNG streams) — pages and copy-on-write still apply.
     n_pages: paged-pool page budget (default: full residency — every
         slot can map its whole ``max_len`` — plus the null page).  A
-        smaller budget recycles freed/evicted pages and raises
-        ``RuntimeError`` on exhaustion.
+        smaller budget recycles freed/evicted pages; exhaustion
+        mid-step **preempts** the youngest decoding request (released
+        pages recycle, the victim requeues and resumes) instead of
+        raising.
+    queue_cap: bound on the waiting queue; a submit finding it full
+        resolves the new request ``REJECTED`` (empty result, terminal
+        status) instead of queueing or raising.  ``None`` = unbounded.
+    deadline_ms: default per-request deadline, measured from submit;
+        expired requests — queued or in-flight — resolve ``TIMED_OUT``
+        with the tokens harvested so far.  ``None`` = no deadline.
+    runaway_ovf: §5 overflow-rate runaway threshold.  Each decode step
+        harvests every slot's cumulative cache overflow rate
+        (``kv_pool.slot_overflow_rates``, computed in-jit) with the
+        tokens; an active slot whose rate exceeds this quarantines as
+        ``FAILED``.  ``None`` disables the sentinel.
+    max_preempts: a request evicted this many times resolves ``FAILED``
+        on the next eviction attempt instead of requeueing (bounds
+        preemption ping-pong on pathologically small arenas).
+    faults: optional deterministic fault harness
+        (:class:`repro.serve.faults.FaultHarness`) — injects NaN logits,
+        KV bit flips, forced page exhaustion, and admission delays for
+        chaos testing.  ``None`` in production.
     """
 
     def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
@@ -125,7 +200,12 @@ class ServeEngine:
                  seed: int = 0, init_exp: float = -6.0,
                  prefill_chunk: Optional[int] = None,
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 queue_cap: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 runaway_ovf: Optional[float] = None,
+                 max_preempts: int = 4,
+                 faults=None):
         if cfg.input_mode != "tokens" or cfg.encoder_layers:
             raise ValueError("ServeEngine serves token-in decoder models")
         if max_slots < 1:
@@ -134,6 +214,11 @@ class ServeEngine:
         self.max_slots, self.max_len = max_slots, max_len
         self.sampler_cfg = sampler_cfg
         self.seed = seed
+        self.queue_cap = queue_cap
+        self.deadline_ms = deadline_ms
+        self.runaway_ovf = runaway_ovf
+        self.max_preempts = max_preempts
+        self._faults = faults
         gs = T.group_shapes(cfg)
         self.exps = ScaleState.create(gs, init_exp).exps
         self.sinks = {n: jnp.zeros(s + (3,), jnp.float32)
@@ -203,9 +288,15 @@ class ServeEngine:
         self._reqs: List[Optional[Request]] = [None] * B
         self._gen: List[List[int]] = [[] for _ in range(B)]
         self._keys = np.zeros((B, 2), np.uint32)
+        self._seq = np.zeros(B, np.int64)     # admission order (victim pick)
         self._queue: collections.deque = collections.deque()
         self._results: Dict[int, np.ndarray] = {}
+        self._status: Dict[int, RequestStatus] = {}
         self._next_uid = 0
+        self._admit_counter = 0
+        self._step_idx = 0
+        self._budget = 1 << 62                # run() tightens this
+        self._auto_budget = True
         self._ovf = np.zeros(3, np.float64)   # harvested at request finish
         self.metrics = metrics.ServeMetrics()
 
@@ -250,22 +341,31 @@ class ServeEngine:
                                      self.sinks, max_cache_len=self.max_len)
         # first generated token sits at absolute position L = prompt length
         pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
-        first = sampler.sample(logits, sampler.position_keys(keys, pos),
+        safe, bad = sampler.guard_logits(logits)
+        first = sampler.sample(safe, sampler.position_keys(keys, pos),
                                self.sampler_cfg)
-        return first, cache
+        return first, bad, cache
 
     def _insert_impl(self, pool, entry, slots, keys):
         return kv_pool.insert(pool, entry, slots, self.codec, keys)
 
-    def _decode_impl(self, pool, tok, pos, keys):
+    def _sample_guarded(self, logits, pos, keys, nan_mask):
+        """Shared decode tail: fault mask → sentinel → sample."""
+        logits = jnp.where(nan_mask[:, None], jnp.float32(jnp.nan), logits)
+        safe, bad = sampler.guard_logits(logits)
+        nxt = sampler.sample(safe, sampler.position_keys(keys, pos + 1),
+                             self.sampler_cfg)
+        return nxt, bad
+
+    def _decode_impl(self, pool, tok, pos, keys, nan_mask):
         logits, _, pool = T.decode_step(self.cfg, self.policy, self.params,
                                         pool, tok, pos, self.exps,
                                         self.sinks, kv_codec=self.codec)
-        nxt = sampler.sample(logits, sampler.position_keys(keys, pos + 1),
-                             self.sampler_cfg)
-        return nxt, pool
+        nxt, bad = self._sample_guarded(logits, pos, keys, nan_mask)
+        rate = kv_pool.slot_overflow_rates(pool, self.max_slots)
+        return nxt, bad, rate, pool
 
-    def _decode_masked_impl(self, pool, tok, pos, keys, mask):
+    def _decode_masked_impl(self, pool, tok, pos, keys, mask, nan_mask):
         # chunked mode: slots mid-prefill (or free) decode garbage whose
         # cache append must be dropped — their pool rows and controller
         # state must stay byte-identical to a solo run
@@ -273,9 +373,9 @@ class ServeEngine:
                                         pool, tok, pos, self.exps,
                                         self.sinks, kv_codec=self.codec,
                                         append_mask=mask)
-        nxt = sampler.sample(logits, sampler.position_keys(keys, pos + 1),
-                             self.sampler_cfg)
-        return nxt, pool
+        nxt, bad = self._sample_guarded(logits, pos, keys, nan_mask)
+        rate = kv_pool.slot_overflow_rates(pool, self.max_slots)
+        return nxt, bad, rate, pool
 
     def _chunk_impl(self, pool, tokens, slot, p0, n_valid, keys):
         """One prefill chunk for one slot. ``tokens``: [1, C] (padded);
@@ -291,15 +391,24 @@ class ServeEngine:
         # the first generated token sits at absolute position p0 + n_valid
         # (== prompt length when this is the final chunk) — the same key
         # fold as whole-prompt _prefill_impl
-        tok = sampler.sample(logits,
+        safe, bad = sampler.guard_logits(logits)
+        tok = sampler.sample(safe,
                              sampler.position_keys(keys, (p0 + n_valid)[None]),
                              self.sampler_cfg)
-        return tok, pool
+        return tok, bad, pool
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new: int = 16,
-               eos_id: Optional[int] = None) -> int:
-        """Queue one request; returns its uid."""
+               eos_id: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue one request; returns its uid.
+
+        Malformed requests (empty prompt, zero budget, over capacity)
+        still raise — those are caller bugs, not load.  Load shedding is
+        status-typed: a full queue resolves the request ``REJECTED``
+        immediately (empty result, no exception); ``deadline_ms``
+        (default: the engine's) stamps an expiry the scheduler enforces.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -314,24 +423,63 @@ class ServeEngine:
         # cache is exactly the state after the real tokens
         uid = self._next_uid
         self._next_uid += 1
-        self._queue.append(Request(uid, prompt, max_new, eos_id))
         self.metrics.on_submit(uid, prompt.size)
+        if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
+            self._results[uid] = np.zeros(0, np.int32)
+            self._status[uid] = RequestStatus.REJECTED
+            self.metrics.on_reject(uid)
+            return uid
+        dl = deadline_ms if deadline_ms is not None else self.deadline_ms
+        deadline = metrics._now() + dl / 1e3 if dl is not None else None
+        self._queue.append(Request(uid, prompt, max_new, eos_id,
+                                   deadline=deadline))
+        self.metrics.observe_queue_depth(len(self._queue))
         return uid
 
-    def _finish(self, slot: int) -> None:
-        req = self._reqs[slot]
-        self._results[req.uid] = np.asarray(self._gen[slot], np.int32)
-        self.metrics.on_finish(req.uid)
-        if self._packed:
-            self._ovf += np.asarray(self._slot_tot(self._pool, slot),
-                                    np.float64)
+    def status(self, uid: int) -> Optional[RequestStatus]:
+        """Terminal status of ``uid`` (None while queued / in flight)."""
+        return self._status.get(uid)
+
+    @property
+    def statuses(self) -> Dict[int, RequestStatus]:
+        return dict(self._status)
+
+    def _release_slot(self, slot: int) -> None:
+        """Drop the slot's host state and (paged) its page references."""
         if self._paged:
-            # decref the slot's pages AFTER the stats harvest above read
-            # them; registered prefix pages stay resident for reuse
+            # registered prefix pages stay resident for reuse; everything
+            # else decrefs back to the free list
             self._alloc.free_slot(slot)
             self._pstarted[slot] = False
+        if slot in self._prefilling:
+            self._prefilling.remove(slot)
         self._active[slot] = False
         self._reqs[slot] = None
+        self._gen[slot] = []
+
+    def _finish(self, slot: int,
+                status: RequestStatus = RequestStatus.OK) -> None:
+        req = self._reqs[slot]
+        self._results[req.uid] = np.asarray(
+            list(req.carry) + self._gen[slot], np.int32)
+        self._status[req.uid] = status
+        self.metrics.on_finish(req.uid, status.value)
+        # harvest BEFORE the page release below makes the reads stale —
+        # but only if this request actually wrote the slot (a request
+        # resolved before its first chunk would harvest the previous
+        # occupant's counters twice)
+        started = not self.prefill_chunk or (
+            self._pstarted[slot] if self._paged else self._pfill[slot] > 0)
+        if self._packed and started:
+            self._ovf += np.asarray(self._slot_tot(self._pool, slot),
+                                    np.float64)
+        self._release_slot(slot)
+
+    def _finish_queued(self, req: Request, status: RequestStatus) -> None:
+        """Resolve a request that never (re)reached a slot."""
+        self._results[req.uid] = np.asarray(list(req.carry), np.int32)
+        self._status[req.uid] = status
+        self.metrics.on_finish(req.uid, status.value)
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
         """Finish the slot if its budget is spent or ``tok`` is its EOS."""
@@ -342,10 +490,115 @@ class ServeEngine:
             return True
         return False
 
+    # -- preemption --------------------------------------------------------
+    def _preempt(self, victim: int) -> None:
+        """Evict ``victim`` to the queue front, tokens-so-far carried.
+
+        The requeued request's prompt is ``original prompt + generated
+        tokens``: re-admission chunk-prefills it (sharing any still
+        registered prefix pages), and the first token it samples sits at
+        absolute position ``len(prompt) + len(carry)`` — exactly the key
+        fold the uninterrupted decode would have used, so greedy and
+        sampled streams resume bit-identically.  A request past
+        ``max_preempts`` resolves FAILED instead (thrash bound).
+        """
+        req = self._reqs[victim]
+        if req.n_preempt >= self.max_preempts:
+            self._finish(victim, RequestStatus.FAILED)
+            return
+        gen = self._gen[victim]
+        tokens = np.concatenate(
+            [req.tokens, np.asarray(gen, np.int32)]) if gen else req.tokens
+        nr = Request(req.uid, tokens, req.max_new - len(gen), req.eos_id,
+                     deadline=req.deadline,
+                     carry=tuple(req.carry) + tuple(gen),
+                     n_preempt=req.n_preempt + 1)
+        self._release_slot(victim)
+        self._queue.appendleft(nr)
+        self._status[req.uid] = RequestStatus.PREEMPTED
+        self.metrics.on_preempt(req.uid)
+        if self._auto_budget and self.prefill_chunk:
+            # the requeue re-prefills and re-decodes: extend the drain
+            # budget so an auto-budgeted run() still terminates cleanly
+            self._budget += (-(-int(tokens.size) // self.prefill_chunk)
+                             + nr.max_new + 2)
+
+    def _handle_exhaustion(self, slot: int) -> bool:
+        """Free pages for ``slot`` by preempting a sibling.
+
+        Victim order: youngest *decoding* request first (most recent
+        admission — least sunk cost, shortest re-prefill), then youngest
+        prefilling one.  Never the requester itself: its re-admission
+        would need at least the pages it already holds, so
+        self-preemption cannot make progress.  Returns False when no
+        sibling exists (the caller resolves the requester FAILED).
+        """
+        cands = [s for s in range(self.max_slots)
+                 if s != slot and self._reqs[s] is not None
+                 and self._active[s]]
+        if not cands:
+            cands = [s for s in range(self.max_slots)
+                     if s != slot and self._reqs[s] is not None]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda s: self._seq[s])
+        self._preempt(victim)
+        return True
+
+    def _ensure_blocks_safe(self, slot: int, start: int, n: int) -> bool:
+        """`_ensure_blocks` that converts exhaustion into preemption.
+
+        Retries after each preemption (freed pages recycle immediately;
+        ``ensure_block`` is idempotent for blocks already made private).
+        When no victim remains the requester resolves FAILED with its
+        harvested tokens.  Never raises ``PageExhausted``.
+        """
+        while True:
+            try:
+                self._ensure_blocks(slot, start, n)
+                return True
+            except paged.PageExhausted:
+                if not self._handle_exhaustion(slot):
+                    self._finish(slot, RequestStatus.FAILED)
+                    return False
+
+    # -- deadlines ---------------------------------------------------------
+    def _expire_queue(self) -> None:
+        if not self._queue:
+            return
+        now = metrics._now()
+        kept: collections.deque = collections.deque()
+        for r in self._queue:
+            if r.deadline is not None and now > r.deadline:
+                self._finish_queued(r, RequestStatus.TIMED_OUT)
+            else:
+                kept.append(r)
+        self._queue = kept
+
+    def _expire_inflight(self) -> None:
+        stamped = [s for s in range(self.max_slots)
+                   if self._reqs[s] is not None
+                   and self._reqs[s].deadline is not None]
+        if not stamped:
+            return
+        now = metrics._now()
+        for s in stamped:
+            if self._reqs[s] is not None and now > self._reqs[s].deadline:
+                self._finish(s, RequestStatus.TIMED_OUT)
+
+    # -- admission ---------------------------------------------------------
+    def _mark_admitted(self, slot: int, req: Request) -> None:
+        self._admit_counter += 1
+        self._seq[slot] = self._admit_counter
+        self.metrics.on_admit(req.uid)
+
     def _admit(self) -> None:
         """Fill free slots from the queue, grouping equal prompt lengths."""
         free = list(np.where(~self._active)[0])
         while self._queue and free:
+            if self._faults is not None and not self._faults.admit_ok(
+                    self._queue[0].uid, self._step_idx):
+                break
             plen = self._queue[0].tokens.size
             cap = min(len(free), self._admit_group_cap)
             group: List[Request] = []
@@ -356,18 +609,24 @@ class ServeEngine:
             tokens = jnp.asarray(np.stack([r.tokens for r in group]))
             keys = jnp.stack([sampler.request_key(self.seed, r.uid)
                               for r in group])
-            first, entry = self._prefill(tokens, keys)
+            first, bad, entry = self._prefill(tokens, keys)
             self._pool = self._insert(self._pool, entry,
                                       jnp.asarray(slots, jnp.int32), keys)
             first = np.asarray(first)
-            for r, s, tok in zip(group, slots, first):
-                self.metrics.on_admit(r.uid)
-                self.metrics.on_token(r.uid)
-                self._reqs[s], self._gen[s] = r, [int(tok)]
+            bad = np.asarray(bad)
+            for r, s, tok, b in zip(group, slots, first, bad):
+                self._mark_admitted(s, r)
+                self._reqs[s], self._gen[s] = r, []
                 self._tok[s], self._pos[s] = tok, plen
                 self._keys[s] = np.asarray(
                     sampler.request_key(self.seed, r.uid))
                 self._active[s] = True
+                if b:   # NaN/Inf prefill logits: quarantine at admission
+                    self._finish(s, RequestStatus.FAILED)
+                    free.append(s)
+                    continue
+                self.metrics.on_token(r.uid)
+                self._gen[s] = [int(tok)]
                 if self._maybe_finish(s, int(tok)):
                     free.append(s)
 
@@ -375,8 +634,14 @@ class ServeEngine:
         """Assign queued requests to free slots immediately (no grouping,
         no prefill compute yet — chunks run one per engine step)."""
         free = [s for s in range(self.max_slots) if self._reqs[s] is None]
-        while self._queue and free:
-            r = self._queue.popleft()
+        i = 0
+        while self._queue and free and i < len(self._queue):
+            r = self._queue[i]
+            if self._faults is not None and not self._faults.admit_ok(
+                    r.uid, self._step_idx):
+                i += 1          # held back: later requests may still admit
+                continue
+            del self._queue[i]
             s = free.pop(0)
             self._reqs[s] = r
             self._pfill[s] = 0
@@ -390,7 +655,7 @@ class ServeEngine:
                 # seed the slot's cache PRNG chains before its first chunk
                 self._pool = self._seed_keys(self._pool, jnp.int32(s), key)
             self._prefilling.append(s)
-            self.metrics.on_admit(r.uid)
+            self._mark_admitted(s, r)
 
     def _ensure_blocks(self, slot: int, start: int, n: int) -> None:
         """Paged mode: make the blocks covering rows ``[start, start+n)``
@@ -433,9 +698,9 @@ class ServeEngine:
         n = min(C, r.tokens.size - f)
         toks = np.zeros((1, C), np.int32)
         toks[0, :n] = r.tokens[f:f + n]
-        if self._paged:
-            self._ensure_blocks(s, f, n)
-        first, self._pool = self._chunk(
+        if self._paged and not self._ensure_blocks_safe(s, f, n):
+            return                    # requester quarantined (no victim)
+        first, bad, self._pool = self._chunk(
             self._pool, jnp.asarray(toks), jnp.int32(s), jnp.int32(f),
             jnp.int32(n), jnp.asarray(self._keys[s:s + 1]))
         self._pfill[s] = f + n
@@ -445,6 +710,12 @@ class ServeEngine:
             self._prefilling.popleft()
             if self._paged and self._share_prefix:
                 self._alloc.register_prefix(s, r.tokens)
+            if bool(np.asarray(bad)[0]):
+                # NaN/Inf prefill logits: quarantine before the poisoned
+                # token enters the stream (carried tokens survive)
+                self._active[s] = True
+                self._finish(s, RequestStatus.FAILED)
+                return
             tok = int(np.asarray(first)[0])
             self.metrics.on_token(r.uid)
             self._gen[s] = [tok]
@@ -455,41 +726,87 @@ class ServeEngine:
     def step(self) -> None:
         """Admit what fits, run one prefill chunk (chunked mode), then
         decode one token on every active slot."""
+        self._step_idx += 1
+        if self._faults is not None:
+            self._faults.on_step(self)
+        self._expire_queue()
         if self.prefill_chunk:
             self._admit_chunked()
             self._step_prefill_chunk()
         else:
             self._admit()
-        if not self._active.any():
-            return
-        if self.prefill_chunk:
-            if self._paged:
+        if self._active.any():
+            nan_mask = np.zeros(self.max_slots, bool)
+            if self._faults is not None:
+                nan_mask = self._faults.nan_mask(self)
+            if self.prefill_chunk and self._paged:
                 # each active slot appends one row at _pos this step —
-                # fresh page at a block boundary, COW if still shared
+                # fresh page at a block boundary, COW if still shared;
+                # exhaustion preempts the youngest sibling, never raises
                 for s in np.where(self._active)[0]:
-                    self._ensure_blocks(int(s), int(self._pos[s]), 1)
-            nxt, self._pool = self._decode(
-                self._pool, jnp.asarray(self._tok), jnp.asarray(self._pos),
-                jnp.asarray(self._keys), jnp.asarray(self._active))
-        else:
-            nxt, self._pool = self._decode(self._pool,
-                                           jnp.asarray(self._tok),
-                                           jnp.asarray(self._pos),
-                                           jnp.asarray(self._keys))
-        nxt = np.asarray(nxt)
-        self.metrics.on_decode_step()
-        for s in np.where(self._active)[0]:
-            tok = int(nxt[s])
-            self._gen[s].append(tok)
-            self._pos[s] += 1
-            self._tok[s] = tok
-            self.metrics.on_token(self._reqs[s].uid)
-            self._maybe_finish(s, tok)
+                    s = int(s)
+                    if self._active[s]:   # earlier preemption may clear it
+                        self._ensure_blocks_safe(s, int(self._pos[s]), 1)
+        if self._active.any():
+            if self.prefill_chunk:
+                nxt, bad, rate, self._pool = self._decode(
+                    self._pool, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), jnp.asarray(self._keys),
+                    jnp.asarray(self._active), jnp.asarray(nan_mask))
+            else:
+                nxt, bad, rate, self._pool = self._decode(
+                    self._pool, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), jnp.asarray(self._keys),
+                    jnp.asarray(nan_mask))
+            nxt, bad, rate = (np.asarray(nxt), np.asarray(bad),
+                              np.asarray(rate))
+            self.metrics.on_decode_step()
+            for s in np.where(self._active)[0]:
+                s = int(s)
+                if bad[s]:
+                    # NaN/Inf decode logits: drop the poisoned token,
+                    # quarantine the request, keep siblings untouched
+                    self._finish(s, RequestStatus.FAILED)
+                    continue
+                if self.runaway_ovf is not None and \
+                        rate[s] > self.runaway_ovf:
+                    # §5 overflow runaway: the controller lost the race
+                    self._finish(s, RequestStatus.FAILED)
+                    continue
+                tok = int(nxt[s])
+                self._gen[s].append(tok)
+                self._pos[s] += 1
+                self._tok[s] = tok
+                self.metrics.on_token(self._reqs[s].uid)
+                self._maybe_finish(s, tok)
+        self._expire_inflight()
+
+    def _drain_timeout(self) -> None:
+        """Out of steps: resolve everything in flight instead of raising.
+
+        In-flight slots resolve TIMED_OUT with every harvested token;
+        queued requests resolve TIMED_OUT, except preempted ones which
+        keep their terminal PREEMPTED (they had a slot and lost it)."""
+        for s in range(self.max_slots):
+            if self._reqs[s] is not None:
+                self._finish(s, RequestStatus.TIMED_OUT)
+        while self._queue:
+            r = self._queue.popleft()
+            self._finish_queued(r, RequestStatus.PREEMPTED if r.n_preempt
+                                else RequestStatus.TIMED_OUT)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
-        """Drive until the queue drains; returns ``{uid: generated ids}``."""
+        """Drive until the queue drains; returns ``{uid: generated ids}``.
+
+        Never raises for scheduling reasons: when the step budget runs
+        out (``max_steps``, or the auto budget on a wedged engine) every
+        in-flight request resolves ``TIMED_OUT`` with its harvested
+        tokens and the partial results are returned — check
+        :meth:`status` / :attr:`statuses` for per-request outcomes.
+        """
         if max_steps is not None:
-            budget = max_steps
+            self._budget = max_steps
+            self._auto_budget = False
         else:
             pending = list(self._queue) + [r for r in self._reqs
                                            if r is not None]
@@ -497,12 +814,14 @@ class ServeEngine:
             if self.prefill_chunk:
                 chunks = sum(-(-r.tokens.size // self.prefill_chunk)
                              for r in pending)
-            budget = (sum(r.max_new for r in pending) + chunks
-                      + len(self._queue) + self.max_slots + 4)
+            self._budget = (sum(r.max_new for r in pending) + chunks
+                            + len(self._queue) + self.max_slots + 4)
+            self._auto_budget = True
         steps = 0
         while self._queue or self._prefilling or self._active.any():
-            if steps >= budget:
-                raise RuntimeError(f"engine did not drain in {budget} steps")
+            if steps >= self._budget:
+                self._drain_timeout()
+                break
             self.step()
             steps += 1
         return dict(self._results)

@@ -485,6 +485,38 @@ def overflow_summary(pool: dict, active=None) -> dict:
             "cache_appends_quantized": tot}
 
 
+def slot_overflow_rates(pool: dict, n_slots: int) -> Array:
+    """Per-slot cumulative §5 overflow rate, jit-safe — the runaway sentinel.
+
+    Returns f32 [n_slots]: overflowed elements / quantized elements of
+    each slot's appends since admission, summed over layers and K/V.
+    Slot-major packed pools read their per-slot counters directly; paged
+    pools gather per-page counters through each slot's block table (the
+    null page carries zeros).  Float32 pools (no counters) return zeros.
+
+    The engine evaluates this inside the decode jit and harvests it with
+    the sampled tokens: a slot whose §5 controller has lost the overflow
+    race (rate above the engine's ``runaway_ovf`` threshold) is
+    quarantined as FAILED instead of silently poisoning the batch.
+    """
+    ovf = jnp.zeros((n_slots,), jnp.float32)
+    tot = jnp.zeros((n_slots,), jnp.float32)
+    for sc in pool.values():
+        for e in sc.values():
+            if "k_m" not in e or "tot_k" not in e:
+                continue
+            if "bt" in e:                 # paged: gather via block table
+                for t in (e["tot_k"], e["tot_v"]):
+                    g = jax.vmap(lambda tl, btl: tl[btl])(t, e["bt"])
+                    ovf = ovf + jnp.sum(g[..., 0], axis=(0, 2))
+                    tot = tot + jnp.sum(g[..., 2], axis=(0, 2))
+                continue
+            for t in (e["tot_k"], e["tot_v"]):
+                ovf = ovf + jnp.sum(t[..., 0], axis=0)
+                tot = tot + jnp.sum(t[..., 2], axis=0)
+    return ovf / jnp.maximum(tot, 1.0)
+
+
 def slot_totals(pool: dict, slot) -> Array:
     """One slot's cumulative ``(ovf, ovf_half, total)`` over all layers.
 

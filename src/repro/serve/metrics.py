@@ -4,7 +4,9 @@ Host-side and allocation-free on the hot path: the engine calls the
 ``on_*`` hooks with ``time.perf_counter`` stamps; ``summary()`` reduces to
 the numbers a serving dashboard wants — TTFT, queue wait, aggregate
 decode throughput — plus the packed pool's cumulative cache overflow rate
-(see ``kv_pool.overflow_summary``).
+(see ``kv_pool.overflow_summary``) and the robustness counters the
+admission-control/preemption/quarantine layer feeds (rejected, timed
+out, preempted, failed, queue-depth high-water mark).
 """
 from __future__ import annotations
 
@@ -27,6 +29,8 @@ class RequestTrace:
     t_finish: Optional[float] = None
     new_tokens: int = 0
     prefill_chunks: int = 0
+    preempts: int = 0
+    status: Optional[str] = None      # terminal RequestStatus.value
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -45,15 +49,22 @@ class ServeMetrics:
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
         self.decode_steps: int = 0
+        self.rejected: int = 0
+        self.timed_out: int = 0
+        self.preemptions: int = 0     # preemption EVENTS (one uid may repeat)
+        self.failed: int = 0          # quarantined (numeric sentinel) + OOM
+        self.queue_depth_peak: int = 0
 
     # -- engine hooks -----------------------------------------------------
     def on_submit(self, uid: int, prompt_len: int) -> None:
         self.traces[uid] = RequestTrace(uid, prompt_len, _now())
 
     def on_admit(self, uid: int) -> None:
-        self.traces[uid].t_admit = _now()
+        tr = self.traces[uid]
+        if tr.t_admit is None:        # re-admission after preemption keeps
+            tr.t_admit = _now()       # the first admit stamp (true wait)
         if self.t_start is None:
-            self.t_start = self.traces[uid].t_admit
+            self.t_start = _now()
 
     def on_token(self, uid: int) -> None:
         tr = self.traces[uid]
@@ -71,15 +82,37 @@ class ServeMetrics:
         """
         self.traces[uid].prefill_chunks += 1
 
-    def on_finish(self, uid: int) -> None:
-        self.traces[uid].t_finish = self.t_end = _now()
+    def on_finish(self, uid: int, status: str = "ok") -> None:
+        tr = self.traces[uid]
+        tr.t_finish = self.t_end = _now()
+        tr.status = status
+        if status == "timed_out":
+            self.timed_out += 1
+        elif status == "failed":
+            self.failed += 1
+
+    def on_reject(self, uid: int) -> None:
+        """Admission control bounced the request (queue full)."""
+        tr = self.traces[uid]
+        tr.t_finish = _now()
+        tr.status = "rejected"
+        self.rejected += 1
+
+    def on_preempt(self, uid: int) -> None:
+        """The request lost its slot/pages and went back to the queue."""
+        self.traces[uid].preempts += 1
+        self.preemptions += 1
 
     def on_decode_step(self) -> None:
         self.decode_steps += 1
 
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depth_peak = max(self.queue_depth_peak, depth)
+
     # -- aggregates -------------------------------------------------------
     def summary(self, extra: Optional[dict] = None) -> dict:
         done = [t for t in self.traces.values() if t.t_finish is not None]
+        finished_ok = [t for t in done if t.status in (None, "ok")]
         new_tokens = sum(t.new_tokens for t in self.traces.values())
         wall = ((self.t_end or _now()) - self.t_start
                 if self.t_start is not None else 0.0)
@@ -88,7 +121,12 @@ class ServeMetrics:
                  if t.queue_wait is not None]
         out = {
             "requests_submitted": len(self.traces),
-            "requests_finished": len(done),
+            "requests_finished": len(finished_ok),
+            "requests_rejected": self.rejected,
+            "requests_timed_out": self.timed_out,
+            "requests_failed": self.failed,
+            "preemptions": self.preemptions,
+            "queue_depth_peak": self.queue_depth_peak,
             "new_tokens": new_tokens,
             "decode_steps": self.decode_steps,
             "wall_s": wall,

@@ -64,6 +64,16 @@ Array = jax.Array
 _SLOT_KEYS = ("bt", "pos", "n_app", "key")
 
 
+class PageExhausted(RuntimeError):
+    """The page arena has no free or evictable page left.
+
+    A ``RuntimeError`` subclass so pre-existing callers (and tests
+    matching ``"exhausted"``) keep working, but typed so the engine can
+    catch exhaustion *specifically* and respond with preemption — a
+    scheduling event, not a crash — without masking genuine errors.
+    """
+
+
 def is_paged_entry(entry: dict) -> bool:
     """True for paged attention cache entries (block table present)."""
     return isinstance(entry, dict) and "bt" in entry and "pos" in entry
@@ -618,7 +628,7 @@ class PageAllocator:
         if not self._free:
             self._evict_one()
         if not self._free:
-            raise RuntimeError(
+            raise PageExhausted(
                 f"page pool exhausted ({self.n_pages - 1} pages, "
                 f"{len(self._index)} registered prefixes all still mapped)")
         p = self._free.pop()
@@ -680,6 +690,26 @@ class PageAllocator:
             self.cow_forks += 1
             return ("cow", page, dst)
         return None
+
+    # -- fault injection --------------------------------------------------
+    def grab(self, n: int) -> List[int]:
+        """Hold up to ``n`` pages hostage (fault injection: forced
+        exhaustion).  Grabbed pages are allocated but mapped by no block
+        table, so nothing reads or writes them; :meth:`ungrab` returns
+        them.  Stops early (without raising) when the arena runs dry —
+        the caller decides how much pressure it wants."""
+        out: List[int] = []
+        for _ in range(n):
+            try:
+                out.append(self.alloc())
+            except PageExhausted:
+                break
+        return out
+
+    def ungrab(self, pages: List[int]) -> None:
+        """Release pages held by :meth:`grab` back to the free list."""
+        for p in pages:
+            self.decref(int(p))
 
     # -- prompt-prefix sharing -------------------------------------------
     @staticmethod

@@ -41,6 +41,23 @@ def position_keys(req_keys: Array, pos: Array) -> Array:
     return jax.vmap(jax.random.fold_in)(req_keys, pos)
 
 
+def guard_logits(logits: Array):
+    """Device-side numeric sentinel: split non-finite rows out of a batch.
+
+    Returns ``(safe_logits, bad)`` where ``bad`` is a bool [B] flag —
+    True for any row containing a NaN/Inf — and ``safe_logits`` has
+    those rows zeroed so :func:`sample` stays well-defined (``argmax``
+    over NaN and ``categorical`` over NaN both produce garbage indices
+    that would poison downstream host bookkeeping).  The engine harvests
+    ``bad`` with the sampled tokens — one device sync, no extra
+    round-trip — and quarantines flagged slots instead of crashing the
+    batch.
+    """
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+    safe = jnp.where(bad[..., None], 0.0, logits)
+    return safe, bad
+
+
 def sample(logits: Array, keys: Array, cfg: SamplerConfig) -> Array:
     """Draw one token per row. ``logits``: [B, V]; ``keys``: [B, 2]."""
     if cfg.kind == "greedy":

@@ -1,0 +1,280 @@
+"""Chaos suite: fault injection against the serve engine's robustness layer.
+
+Every test drives real faults through the real boundaries (device-side
+NaN masks, allocator page grabs, mantissa bit flips, admission gates)
+and asserts the two invariants the robustness layer promises:
+
+1. the engine always drains — ``run()`` never raises for load, faults,
+   or exhaustion, and every submitted uid ends in a terminal
+   ``RequestStatus``;
+2. fault blast radius is one request — sibling streams are byte-for-byte
+   identical to a fault-free run.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro import configs
+from repro.core.policy import PrecisionPolicy
+from repro.models import transformer as T
+from repro.serve import (AdmitDelay, FaultHarness, KVBitFlip, LogitNaN,
+                         PageSqueeze, RequestStatus, SamplerConfig,
+                         ServeEngine, chaos_plan)
+from repro.serve import metrics as M
+
+P, MAXLEN = 8, 32
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("llama3_8b")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prompts(model):
+    cfg, _ = model
+    shared = (np.arange(1, 17) % cfg.vocab_size).astype(np.int32)
+    pa = np.concatenate([shared, [17, 18, 19, 20]]).astype(np.int32)
+    pb = np.concatenate([shared, [31, 32, 33, 34]]).astype(np.int32)
+    pc = (np.arange(5, 15) % cfg.vocab_size).astype(np.int32)
+    return pa, pb, pc
+
+
+def _mk(model, *, bits=0, slots=2, n_pages=None, faults=None,
+        sampler=None, **kw):
+    cfg, params = model
+    pol = PrecisionPolicy("dfxp", fused_decode=bool(bits), prefill_chunk=P,
+                          page_size=P)
+    return ServeEngine(cfg, pol, params, max_slots=slots, max_len=MAXLEN,
+                       cache_bits=bits, n_pages=n_pages, faults=faults,
+                       sampler_cfg=sampler or SamplerConfig(), **kw)
+
+
+def _submit_all(eng, ps, max_new=6):
+    return [eng.submit(p, max_new=max_new) for p in ps]
+
+
+# ---------------------------------------------------------------------------
+# forced exhaustion → preemption → bit-identical resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler", [SamplerConfig(),
+                                     SamplerConfig(kind="top_k", top_k=5,
+                                                   temperature=0.8)])
+def test_page_squeeze_preempts_and_resumes_bit_identical(model, prompts,
+                                                         sampler):
+    """Grabbing the free pages mid-decode forces genuine exhaustion: the
+    engine preempts the youngest request, recycles its pages, and after
+    the squeeze releases, the victim resumes and finishes — with both
+    the greedy and the stochastic stream bit-identical to uninterrupted
+    solo runs (the sampler keys on absolute position, not on step)."""
+    pa, pb, _ = prompts
+    fh = FaultHarness([PageSqueeze(step=6, n_pages=16, release_step=14)])
+    eng = _mk(model, faults=fh, sampler=sampler)
+    ua, ub = _submit_all(eng, [pa, pb])
+    out = eng.run()
+    assert eng.status(ua) is RequestStatus.OK
+    assert eng.status(ub) is RequestStatus.OK
+    assert eng.stats()["preemptions"] >= 1
+    assert any(ev["kind"] == "page_squeeze" for ev in fh.log)
+    np.testing.assert_array_equal(out[ua], _solo(model, pa, sampler, uid=ua))
+    np.testing.assert_array_equal(out[ub], _solo(model, pb, sampler, uid=ub))
+
+
+def _solo(model, prompt, sampler=None, bits=0, max_new=6, uid=0):
+    """Uninterrupted solo run of ``prompt`` under request id ``uid``.
+
+    The sampler stream keys on ``(seed, uid, position)``, so matching a
+    multi-request engine's stream requires the same uid — earlier ids
+    are burned on throwaway one-token requests."""
+    eng = _mk(model, bits=bits, slots=1, sampler=sampler)
+    for _ in range(uid):
+        eng.submit(np.array([1], np.int32), max_new=1)
+    u = eng.submit(prompt, max_new=max_new)
+    assert u == uid
+    return eng.run()[u]
+
+
+# ---------------------------------------------------------------------------
+# numeric sentinels: NaN quarantine + overflow runaway
+# ---------------------------------------------------------------------------
+
+def test_logit_nan_quarantines_victim_only(model, prompts):
+    """A NaN injected into one slot's decode logits (device-side, through
+    the real sentinel) quarantines that request FAILED with exactly the
+    clean tokens it streamed before the fault; sibling streams are
+    byte-identical to a fault-free run."""
+    pa, pb, pc = prompts
+    clean = _mk(model)
+    cu = _submit_all(clean, [pa, pb])
+    cout = clean.run()
+
+    fh = FaultHarness([LogitNaN(uid=1, token_idx=2)])
+    eng = _mk(model, faults=fh)
+    ua, ub = _submit_all(eng, [pa, pb])
+    out = eng.run()
+    assert ub == 1
+    assert eng.status(ub) is RequestStatus.FAILED
+    assert out[ub].size == 2                   # tokens 0,1 clean, 2 dropped
+    np.testing.assert_array_equal(out[ub], cout[cu[1]][:2])
+    assert eng.status(ua) is RequestStatus.OK
+    np.testing.assert_array_equal(out[ua], cout[cu[0]])  # sibling untouched
+    st = eng.stats()
+    assert st["requests_failed"] == 1
+    assert any(ev["kind"] == "logit_nan" for ev in fh.log)
+    assert eng.metrics.traces[ub].status == "failed"
+
+
+def test_overflow_runaway_quarantines(model, prompts):
+    """The §5 runaway sentinel wires through: with an impossible
+    threshold every packed-pool request trips it on its first decode
+    step and quarantines FAILED (one clean prefill token harvested)."""
+    _, _, pc = prompts
+    eng = _mk(model, bits=8, slots=1, runaway_ovf=-1.0)
+    uid = eng.submit(pc, max_new=6)
+    out = eng.run()
+    assert eng.status(uid) is RequestStatus.FAILED
+    assert out[uid].size == 1
+    assert eng.stats()["requests_failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# KV storage corruption: engine must drain, siblings must be untouched
+# ---------------------------------------------------------------------------
+
+def test_kv_bitflip_drains_and_spares_siblings(model, prompts):
+    """Flipping a mantissa bit in one request's PRIVATE page corrupts at
+    most that request's own stream: the engine still drains with
+    terminal statuses, and the sibling's tokens are byte-identical to a
+    fault-free run (refcounted pages isolate the blast radius)."""
+    pa, pb, _ = prompts
+    clean = _mk(model, bits=8)
+    cu = _submit_all(clean, [pa, pb])
+    cout = clean.run()
+
+    fh = FaultHarness([KVBitFlip(step=6, uid=1, bit=6)])
+    eng = _mk(model, bits=8, faults=fh)
+    ua, ub = _submit_all(eng, [pa, pb])
+    out = eng.run()
+    # the corrupted request may still decode to completion (just with a
+    # perturbed stream) or trip a sentinel — either way it's terminal
+    assert eng.status(ub) in (RequestStatus.OK, RequestStatus.FAILED)
+    assert eng.status(ua) is RequestStatus.OK
+    np.testing.assert_array_equal(out[ua], cout[cu[0]])  # sibling exact
+    kinds = {ev["kind"] for ev in fh.log}
+    assert "bit_flip" in kinds or "bit_flip_skipped" in kinds
+
+
+# ---------------------------------------------------------------------------
+# admission control: queue cap, deadlines, delayed admission
+# ---------------------------------------------------------------------------
+
+def test_queue_cap_rejects_overflow_submit(model, prompts):
+    pa, pb, pc = prompts
+    eng = _mk(model, slots=1, queue_cap=2)
+    ua = eng.submit(pa, max_new=4)
+    ub = eng.submit(pb, max_new=4)
+    uc = eng.submit(pc, max_new=4)            # queue full → rejected
+    assert eng.status(uc) is RequestStatus.REJECTED
+    out = eng.run()
+    assert out[uc].size == 0
+    assert eng.status(ua) is RequestStatus.OK
+    assert eng.status(ub) is RequestStatus.OK
+    st = eng.stats()
+    assert st["requests_rejected"] == 1
+    assert st["queue_depth_peak"] == 2
+    assert eng.metrics.traces[uc].status == "rejected"
+
+
+def test_queued_deadline_times_out(model, prompts):
+    _, _, pc = prompts
+    eng = _mk(model, slots=1)
+    uid = eng.submit(pc, max_new=4, deadline_ms=0.0)   # expires instantly
+    out = eng.run()
+    assert eng.status(uid) is RequestStatus.TIMED_OUT
+    assert out[uid].size == 0
+    assert eng.stats()["requests_timed_out"] == 1
+
+
+def test_inflight_deadline_returns_partial(model, prompts):
+    """A deadline that expires mid-decode resolves TIMED_OUT with the
+    tokens already generated (not an exception, not an empty result)."""
+    _, _, pc = prompts
+    eng = _mk(model, slots=1)
+    uid = eng.submit(pc, max_new=8)
+    # admit + stream a couple of tokens, then force the deadline into
+    # the past — deterministic, no wall-clock race
+    for _ in range(4):
+        eng.step()
+    eng._reqs[0].deadline = M._now() - 1.0
+    out = eng.run()
+    assert eng.status(uid) is RequestStatus.TIMED_OUT
+    assert out[uid].size >= 1
+    assert out[uid].size < 8
+
+
+def test_admit_delay_streams_identical(model, prompts):
+    """Holding a request in the queue changes scheduling, never tokens."""
+    pa, _, pc = prompts
+    clean = _mk(model)
+    cu = _submit_all(clean, [pa, pc], max_new=4)
+    cout = clean.run()
+    fh = FaultHarness([AdmitDelay(uid=1, until_step=6)])
+    eng = _mk(model, faults=fh)
+    ua, uc = _submit_all(eng, [pa, pc], max_new=4)
+    out = eng.run()
+    assert eng.status(ua) is RequestStatus.OK
+    assert eng.status(uc) is RequestStatus.OK
+    np.testing.assert_array_equal(out[ua], cout[cu[0]])
+    np.testing.assert_array_equal(out[uc], cout[cu[1]])
+    assert any(ev["kind"] == "admit_released" for ev in fh.log)
+
+
+# ---------------------------------------------------------------------------
+# drain timeout: partial results, never an exception
+# ---------------------------------------------------------------------------
+
+def test_drain_timeout_returns_partial_results(model, prompts):
+    pa, _, pc = prompts
+    eng = _mk(model, slots=1)
+    ua = eng.submit(pa, max_new=8)
+    uc = eng.submit(pc, max_new=8)
+    out = eng.run(max_steps=6)                 # not enough to finish both
+    assert set(out) == {ua, uc}
+    assert eng.status(ua) is not None and eng.status(uc) is not None
+    assert RequestStatus.TIMED_OUT in (eng.status(ua), eng.status(uc))
+    # the engine is clean afterwards: a new wave runs to completion
+    ud = eng.submit(pc, max_new=4)
+    out2 = eng.run()
+    assert eng.status(ud) is RequestStatus.OK
+    assert out2[ud].size == 4
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos sweep: everything terminal, log serializable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_chaos_sweep_always_drains(model, prompts, seed):
+    """A randomized (but seeded) fault mix — NaNs, bit flips, admission
+    delays, a page squeeze — over an int8 paged engine with a tight
+    arena: run() drains, every request ends terminal, and the fault log
+    round-trips through JSON (the CI artifact contract)."""
+    pa, pb, pc = prompts
+    faults = chaos_plan(seed, [0, 1, 2], n_steps=24, squeeze_pages=4)
+    fh = FaultHarness(faults, seed=seed)
+    eng = _mk(model, bits=8, slots=2, n_pages=9, faults=fh)
+    uids = _submit_all(eng, [pa, pb, pc], max_new=5)
+    out = eng.run()
+    for u in uids:
+        assert eng.status(u) is not None, f"uid {u} has no terminal status"
+        assert u in out
+    assert not eng._queue and not eng._active.any()
+    assert all(r is None for r in eng._reqs)
+    blob = json.dumps(fh.summary())            # must be JSON-serializable
+    assert json.loads(blob)["seed"] == seed
+    st = eng.stats()
+    assert st["requests_submitted"] == 3

@@ -10,7 +10,8 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels.attn import ref as AR
 from repro.kernels.attn.ops import flash_decode_paged, flash_prefill_paged
 from repro.models import transformer as T
-from repro.serve import CacheQuantConfig, ServeEngine, kv_pool, paged
+from repro.serve import (CacheQuantConfig, RequestStatus, ServeEngine,
+                         kv_pool, paged)
 
 SCALE = 0.3
 
@@ -384,12 +385,70 @@ def test_paged_stochastic_disables_sharing(model, prompts):
     np.testing.assert_array_equal(out[0], _run(solo, [pa])[0])
 
 
-def test_engine_page_budget_exhaustion_raises(model, prompts):
+def test_engine_page_budget_exhaustion_fails_request(model, prompts):
+    """A lone request that cannot fit in the arena resolves FAILED —
+    there is no sibling to preempt — and ``run()`` never raises."""
     pa, _ = prompts
     eng = _mk(model, slots=1, n_pages=3)             # null + 2 usable pages
-    eng.submit(pa, max_new=6)                        # needs 4 blocks
-    with pytest.raises(RuntimeError, match="exhausted"):
-        eng.run()
+    uid = eng.submit(pa, max_new=6)                  # needs 4 blocks
+    out = eng.run()
+    assert eng.status(uid) is RequestStatus.FAILED
+    assert out[uid].size == 0                        # died mid-prefill
+    assert eng.stats()["requests_failed"] == 1
+
+
+def test_engine_exhaustion_preempts_f32_bit_identical(model, prompts):
+    """With a sibling present, exhaustion preempts the youngest request
+    instead of failing anyone — and at f32 pool precision BOTH streams,
+    the survivor's and the preempted-and-resumed one's, are bit-identical
+    to their uninterrupted solo runs (the sampler keys on absolute
+    position, so the resumed stream continues exactly where it left)."""
+    pa, pb = prompts
+    # two 20-token prompts + 6 new tokens each need 4 blocks apiece; the
+    # 2 shared prefix pages bring peak demand to 6 usable pages, and the
+    # stagger lets the finisher hand pages to the other — a 4-page arena
+    # guarantees a mid-decode collision and at least one preemption
+    eng = _mk(model, n_pages=5)
+    ua = eng.submit(pa, max_new=6)
+    ub = eng.submit(pb, max_new=6)
+    out = eng.run()
+    assert eng.status(ua) is RequestStatus.OK
+    assert eng.status(ub) is RequestStatus.OK
+    assert eng.stats()["preemptions"] >= 1
+    sa = _run(_mk(model, slots=1), [pa])[0]
+    sb = _run(_mk(model, slots=1), [pb])[0]
+    np.testing.assert_array_equal(out[ua], sa)
+    np.testing.assert_array_equal(out[ub], sb)
+
+
+def test_engine_exhaustion_preempts_int8_accounting(model, prompts):
+    """Same collision on the int8 packed pool: statuses stay OK, the
+    never-preempted sibling is bit-identical to its solo run (its pages
+    were never touched), and the overflow accounting survives the
+    preempted request's release-and-reacquire of pages — the cumulative
+    rate stays a valid average with no double count.  (The preempted
+    stream itself may differ post-resume at int8: carry rows re-quantize
+    through the chunk path, whose page exponents calibrate from chunk
+    maxima rather than per-token maxima — the documented carve-out.)"""
+    pa, pb = prompts
+    eng = _mk(model, bits=8, fused=True, n_pages=5)
+    ua = eng.submit(pa, max_new=6)
+    ub = eng.submit(pb, max_new=6)
+    out = eng.run()
+    assert eng.status(ua) is RequestStatus.OK
+    assert eng.status(ub) is RequestStatus.OK
+    assert eng.stats()["preemptions"] >= 1
+    # the requester (older, ua) is never the victim: its stream is solo
+    sa = _run(_mk(model, bits=8, fused=True, slots=1), [pa])[0]
+    np.testing.assert_array_equal(out[ua], sa)
+    assert out[ub].size == 6                  # full budget, carry included
+    # per-request totals harvested at finish stay consistent
+    cs = eng.cache_stats()
+    assert cs["cache_appends_quantized"] > 0
+    assert 0.0 <= cs["cache_overflow_rate"] <= 1.0
+    # live-pool summary over the drained engine counts shared pages once
+    live = kv_pool.overflow_summary(eng._pool, np.zeros(2, bool))
+    assert live["cache_appends_quantized"] == 0.0
 
 
 def test_paged_rejects_non_dense(prompts):
