@@ -1,16 +1,75 @@
-"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from results."""
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from results.
+
+``--serve-json BENCH_serve.json`` switches to the serve-observability
+report instead: renders the TTFT and per-request tok/s histograms that
+``benchmarks/serve_bench.py`` snapshots into the file's ``"obs"`` key
+(one ``repro.obs`` metrics-registry snapshot per timed row).
+"""
 from __future__ import annotations
 
 import argparse
 import json
 
-from .roofline import NOTES, analyse
+_SERVE_HISTS = [("serve_ttft_seconds", "TTFT (s)"),
+                ("serve_request_tok_per_s", "per-request tok/s")]
+
+
+def _ascii_hist(state: dict, width: int = 36) -> list:
+    """Render one obs histogram snapshot as `[lo, hi) bar count` lines.
+
+    ``state`` is ``repro.obs.Histogram.state()``: ``counts`` has an
+    underflow bucket at [0], overflow at [-1], and ``counts[i + 1]``
+    covering ``[edges[i], edges[i + 1])``.
+    """
+    edges, counts = state["edges"], state["counts"]
+    rows = []
+    if counts[0]:
+        rows.append((f"< {edges[0]:.4g}", counts[0]))
+    for i, c in enumerate(counts[1:-1]):
+        if c:
+            rows.append((f"[{edges[i]:.4g}, {edges[i + 1]:.4g})", c))
+    if counts[-1]:
+        rows.append((f">= {edges[-1]:.4g}", counts[-1]))
+    if not rows:
+        return ["  (empty)"]
+    peak = max(c for _, c in rows)
+    label_w = max(len(lbl) for lbl, _ in rows)
+    return [f"  {lbl:<{label_w}} {'#' * max(1, c * width // peak):<{width}}"
+            f" {c}" for lbl, c in rows]
+
+
+def serve_report(path: str) -> None:
+    payload = json.load(open(path))
+    obs = payload.get("obs")
+    if not obs:
+        raise SystemExit(f"{path} has no 'obs' key — re-record with a "
+                         "benchmarks/run.py that snapshots serve metrics")
+    for row_name in sorted(obs):
+        snap = obs[row_name]
+        print(f"\n### {row_name}")
+        for metric, title in _SERVE_HISTS:
+            st = snap.get(metric)
+            if st is None or st.get("type") != "histogram":
+                continue
+            mean = st["sum"] / st["count"] if st["count"] else 0.0
+            print(f"{title}: n={st['count']} mean={mean:.4g} "
+                  f"min={st['min']} max={st['max']}")
+            print("\n".join(_ascii_hist(st)))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--serve-json", default="",
+                    help="render TTFT/tok-s histograms from a "
+                         "BENCH_serve.json recorded with obs snapshots")
     args = ap.parse_args()
+
+    if args.serve_json:
+        serve_report(args.serve_json)
+        return
+
+    from .roofline import NOTES, analyse
 
     seen = {}
     for line in open(args.results):

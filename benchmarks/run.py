@@ -27,9 +27,17 @@ def main() -> None:
     ap.add_argument("--json-out", default="",
                     help="override the JSON path (needs exactly one "
                          "JSON-emitting suite selected, e.g. --only serve)")
+    ap.add_argument("--profile", action="store_true",
+                    help="enable repro.kernels.dispatch profiling and print "
+                         "the per-bucket call/hit/compile table to stderr "
+                         "(fails if nothing was recorded)")
     args = ap.parse_args()
 
     from . import kernels_bench, paper_tables, serve_bench
+
+    if args.profile:
+        from repro.kernels import dispatch
+        dispatch.profile_enable(True)
 
     suites = [
         ("table3", paper_tables.table3_formats, None),
@@ -77,10 +85,23 @@ def main() -> None:
                           "kind": r[3] if len(r) > 3 else "time"}
                          for r in rows],
             }
+            if name == "serve" and serve_bench.OBS:
+                # per-row obs metrics snapshots (TTFT/tok-s histograms);
+                # render with: python -m benchmarks.make_report --serve-json
+                payload["obs"] = serve_bench.OBS
             with open(out_path, "w") as f:
                 json.dump(payload, f, indent=1)
             print(f"# wrote {len(rows)} {name} rows -> {out_path}",
                   file=sys.stderr)
+
+    if args.profile:
+        from repro.kernels import dispatch
+        stats = dispatch.profile_stats()
+        if not stats:
+            raise SystemExit("--profile: dispatch recorded no buckets — "
+                             "profiling hooks are broken or no kernel "
+                             "dispatch ran")
+        print(dispatch.profile_table(), file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -36,6 +36,12 @@ perf) AND the recording protocol of the committed ``BENCH_serve.json``:
 the CI bench-regression gate (``benchmarks/check_regression.py``) diffs a
 fresh ``--tiny`` run against the committed file row-by-row, so the
 baseline must be recorded at the same shapes.
+
+Each timed row also captures the engine's ``repro.obs`` metrics-registry
+snapshot (TTFT / queue-wait / tok-per-request histograms, counters) into
+the module-level ``OBS`` dict — ``benchmarks/run.py`` persists it as the
+``"obs"`` key of ``BENCH_serve.json`` and ``benchmarks/make_report.py
+--serve-json`` renders the histograms from it.
 """
 from __future__ import annotations
 
@@ -48,6 +54,10 @@ from repro import configs
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
 from repro.serve import ServeEngine
+
+# row name -> obs metrics-registry snapshot of that row's measured waves
+# (filled by run(); persisted into BENCH_serve.json by benchmarks/run.py)
+OBS: dict = {}
 
 
 def _wave(eng, prompts, max_new):
@@ -75,7 +85,8 @@ def _drive(cfg, params, prompts, max_new, *, slots, cache_bits, fused=False,
         toks, dt = _wave(eng, prompts, max_new)   # shared CI machines
         if best is None or dt < best[1]:          # jitter the mean badly
             best = (toks, dt)
-    return best
+    # obs snapshot spans every measured wave (warmup excluded by the reset)
+    return best + (eng.metrics.registry.snapshot(),)
 
 
 def run(tiny: bool = False):
@@ -91,6 +102,7 @@ def run(tiny: bool = False):
                for i, plen in enumerate(lens)]
 
     rows = []
+    OBS.clear()
     variants = [("serve_sequential_f32", 1, 0, False, 0),
                 ("serve_batched_f32", slots, 0, False, 0),
                 ("serve_batched_f32_fused", slots, 0, True, 0),
@@ -102,9 +114,10 @@ def run(tiny: bool = False):
                 ("serve_batched_int16", slots, 16, False, 0),
                 ("serve_batched_int16_fused", slots, 16, True, 0)]
     for name, n_slots, bits, fused, pc in variants:
-        toks, dt = _drive(cfg, params, prompts, max_new, slots=n_slots,
-                          cache_bits=bits, fused=fused, chunk=pc,
-                          waves=3 if tiny else 1)
+        toks, dt, snap = _drive(cfg, params, prompts, max_new, slots=n_slots,
+                                cache_bits=bits, fused=fused, chunk=pc,
+                                waves=3 if tiny else 1)
+        OBS[name] = snap
         rows.append((name, dt / toks * 1e6, toks / dt))
     rows += _memory_rows(cfg, params, prompts, max_new, slots=slots,
                          page=chunk)

@@ -23,6 +23,24 @@ from .quant import q_stats, qbound, ste_quant
 
 Array = jax.Array
 
+# Group-prefix → tensor-class names, the paper's §3 breakdown plus the
+# optimizer-side groups train/state.py adds ("pg:" gradient-of-parameter,
+# "pm:" momentum).  repro.obs aggregates numeric-health series per class.
+_TENSOR_CLASSES = {
+    "a": "activation",
+    "g": "gradient",
+    "w": "weight",
+    "p": "param",
+    "pg": "param_grad",
+    "pm": "momentum",
+}
+
+
+def tensor_class(group: str) -> str:
+    """Tensor class of a tape group name (``"a:mlp_out"`` → ``"activation"``)."""
+    prefix = group.split(":", 1)[0]
+    return _TENSOR_CLASSES.get(prefix, prefix)
+
 
 class QTape:
     def __init__(

@@ -72,6 +72,79 @@ _AUTOTUNE: Dict[str, object] = {"measure": True, "reps": 3}
 _BLOCK_CACHE: Dict[tuple, Tuple[int, ...]] = {}
 _MEASURED: Set[tuple] = set()   # keys whose blocks came from a real timing
 
+# -- dispatch profiling (behind --profile; one dict check when off) ----------
+#
+# Per bucket key: block-selection call count, autotune cache hit/miss
+# split, kernel compiles + wall µs spent inside the measurement loops,
+# and the blocks chosen.  Selection runs at trace time (jit caches the
+# result), so recording here never touches a per-token path; with
+# profiling off the only cost is the ``_PROFILE["enabled"]`` check.
+_PROFILE: Dict[str, bool] = {"enabled": False}
+_PROF: Dict[tuple, dict] = {}
+_COMPILES = [0]                 # bumped by the _measure* loops
+
+
+def profile_enable(on: bool = True) -> None:
+    """Turn dispatch profiling on/off (``launch.serve --profile``,
+    ``benchmarks/run.py --profile``)."""
+    _PROFILE["enabled"] = bool(on)
+
+
+def reset_profile() -> None:
+    _PROF.clear()
+    _COMPILES[0] = 0
+
+
+def profile_stats() -> Dict[tuple, dict]:
+    """Copy of the per-bucket profile: ``{key: {calls, hits, misses,
+    compiles, measure_us, blocks}}`` (empty unless profiling ran)."""
+    return {k: dict(v) for k, v in _PROF.items()}
+
+
+def _prof(key: tuple, *, hit: bool, blocks=None, measure_us: float = 0.0,
+          compiles: int = 0) -> None:
+    if not _PROFILE["enabled"]:
+        return
+    d = _PROF.get(key)
+    if d is None:
+        d = _PROF[key] = {"calls": 0, "hits": 0, "misses": 0,
+                          "compiles": 0, "measure_us": 0.0, "blocks": None}
+    d["calls"] += 1
+    if hit:
+        d["hits"] += 1
+    else:
+        d["misses"] += 1
+    d["compiles"] += compiles
+    d["measure_us"] += measure_us
+    if blocks is not None:
+        d["blocks"] = tuple(blocks)
+
+
+def profile_table() -> str:
+    """The dispatch profile as an aligned text table (one row per bucket)."""
+    rows = [("bucket", "calls", "hit", "miss", "compiles", "measure_ms",
+             "blocks")]
+    for key in sorted(_PROF, key=str):
+        d = _PROF[key]
+        rows.append(("|".join(map(str, key)), str(d["calls"]),
+                     str(d["hits"]), str(d["misses"]), str(d["compiles"]),
+                     f"{d['measure_us'] / 1e3:.2f}",
+                     "x".join(map(str, d["blocks"] or ()))))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return "\n".join("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+                     for r in rows)
+
+
+def profile_trace_counters(tracer) -> None:
+    """Dump the profile onto a :class:`repro.obs.Tracer` as counter events
+    (one multi-series counter per bucket, on the ``dispatch`` track)."""
+    for key in sorted(_PROF, key=str):
+        d = _PROF[key]
+        tracer.counter("dispatch/" + "|".join(map(str, key)),
+                       {"calls": d["calls"], "hits": d["hits"],
+                        "misses": d["misses"], "compiles": d["compiles"],
+                        "measure_us": d["measure_us"]}, tid="dispatch")
+
 
 def _bucket(n: int) -> int:
     """Round up to the next power of two (min 8) — the cache granularity."""
@@ -229,6 +302,7 @@ def _measure(kind: str, R: int, C: int, D: int, width) -> Optional[tuple]:
             jax.block_until_ready(fn())  # compile
         except Exception:  # tiling rejected by the compiler — skip
             continue
+        _COMPILES[0] += 1
         t0 = time.perf_counter()
         for _ in range(reps):
             out = fn()
@@ -253,17 +327,24 @@ def blocks_for(kind: str, R: int, C: int, D: int, *, interpret: bool,
     cache instead; there the MXU accumulation contract is the spec.
     """
     if interpret:
+        _prof(("mm", kind, "interp"), hit=True, blocks=(R, C, D))
         return R, C, D
     key = (kind, _bucket(R), _bucket(C), _bucket(D))
     blocks = _BLOCK_CACHE.get(key)
     if blocks is None:
+        n0, t0 = _COMPILES[0], time.perf_counter()
         measured = (_measure(kind, key[1], key[2], key[3], width)
                     if _AUTOTUNE["measure"] else None)
+        _prof(key, hit=False, blocks=measured or mm_blocks(kind, R, C, D),
+              measure_us=(time.perf_counter() - t0) * 1e6,
+              compiles=_COMPILES[0] - n0)
         blocks = measured or mm_blocks(kind, R, C, D)
         _BLOCK_CACHE[key] = blocks
         if measured:
             _MEASURED.add(key)
             save_autotune()
+    else:
+        _prof(key, hit=True, blocks=blocks)
     return blocks
 
 
@@ -303,6 +384,7 @@ def _measure_attn(W: int, G: int, hd: int, width) -> Optional[tuple]:
             jax.block_until_ready(fn())  # compile
         except Exception:  # tiling rejected by the compiler — skip
             continue
+        _COMPILES[0] += 1
         t0 = time.perf_counter()
         for _ in range(reps):
             out = fn()
@@ -325,17 +407,24 @@ def attn_blocks_for(W: int, G: int, hd: int, *, width=None,
     ``min(512, Ŵ→128)``.
     """
     if interpret:
+        _prof(("attn", "interp"), hit=True, blocks=(W,))
         return W
     key = ("attn", _bucket(W), G, hd, width or 0)
     blocks = _BLOCK_CACHE.get(key)
     if blocks is None:
+        n0, t0 = _COMPILES[0], time.perf_counter()
         measured = (_measure_attn(key[1], G, hd, width)
                     if _AUTOTUNE["measure"] else None)
         blocks = measured or (min(512, round_up(W, 128)),)
+        _prof(key, hit=False, blocks=blocks,
+              measure_us=(time.perf_counter() - t0) * 1e6,
+              compiles=_COMPILES[0] - n0)
         _BLOCK_CACHE[key] = blocks
         if measured:
             _MEASURED.add(key)
             save_autotune()
+    else:
+        _prof(key, hit=True, blocks=blocks)
     return blocks[0]
 
 
@@ -386,6 +475,7 @@ def _measure_prefill(C: int, G: int, hd: int, width) -> Optional[tuple]:
             jax.block_until_ready(fn())  # compile
         except Exception:  # tiling rejected by the compiler — skip
             continue
+        _COMPILES[0] += 1
         t0 = time.perf_counter()
         for _ in range(reps):
             out = fn()
@@ -409,17 +499,24 @@ def prefill_blocks_for(W: int, C: int, G: int, hd: int, *, width=None,
     ``min(512, Ŵ→128)``.
     """
     if interpret:
+        _prof(("prefill", "interp"), hit=True, blocks=(W,))
         return W
     key = ("prefill", C, G, hd, width or 0)
     blocks = _BLOCK_CACHE.get(key)
     if blocks is None:
+        n0, t0 = _COMPILES[0], time.perf_counter()
         measured = (_measure_prefill(C, G, hd, width)
                     if _AUTOTUNE["measure"] else None)
         blocks = measured or (min(512, round_up(W, 128)),)
+        _prof(key, hit=False, blocks=blocks,
+              measure_us=(time.perf_counter() - t0) * 1e6,
+              compiles=_COMPILES[0] - n0)
         _BLOCK_CACHE[key] = blocks
         if measured:
             _MEASURED.add(key)
             save_autotune()
+    else:
+        _prof(key, hit=True, blocks=blocks)
     return blocks[0]
 
 
@@ -438,6 +535,7 @@ def paged_attn_blocks_for(P: int, G: int, hd: int, *, width=None,
     first call, not as a compiler OOM deep in a serve step.  Interpret
     mode has no VMEM and accepts any page.
     """
+    _prof(("paged_attn", P, G, hd, width or 0), hit=True, blocks=(P,))
     if not interpret and not _attn_fits(P, G, hd, width):
         raise ValueError(
             f"page_size {P} (G={G}, hd={hd}, width={width}) exceeds the "
@@ -453,6 +551,7 @@ def paged_prefill_blocks_for(P: int, C: int, G: int, hd: int, *, width=None,
     Same contract as :func:`paged_attn_blocks_for`, with the chunk's
     ``C·G`` score rows included in the fit check.
     """
+    _prof(("paged_prefill", P, C, G, hd, width or 0), hit=True, blocks=(P,))
     if not interpret and not _prefill_fits(P, C, G, hd, width):
         raise ValueError(
             f"page_size {P} (C={C}, G={G}, hd={hd}, width={width}) exceeds "
@@ -578,6 +677,7 @@ __all__ = ["fused_dot", "tape_dot", "blocks_for", "attn_blocks_for",
            "prefill_blocks_for", "paged_attn_blocks_for",
            "paged_prefill_blocks_for", "autotune_cache", "reset_autotune",
            "set_autotune", "save_autotune", "load_autotune",
-           "default_interpret"]
+           "default_interpret", "profile_enable", "reset_profile",
+           "profile_stats", "profile_table", "profile_trace_counters"]
 
 load_autotune()   # persisted measurements survive process restarts

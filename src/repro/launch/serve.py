@@ -143,7 +143,49 @@ def main(argv=None):
     ap.add_argument("--fault-log", default="",
                     help="with --chaos: write the harness event log (JSON) "
                          "to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(engine-step spans, request lifecycle instants, "
+                         "fault events, queue counters) to this path — "
+                         "open in chrome://tracing or ui.perfetto.dev")
+    ap.add_argument("--numerics-log", default="",
+                    help="write the §5 numeric-health timeline (per-layer/"
+                         "per-slot KV exponents, overflow rates, controller "
+                         "up/down moves) as JSONL to this path; packed "
+                         "pools (--cache-bits 8|16) only")
+    ap.add_argument("--numerics-every", type=int, default=0,
+                    help="numerics sampling cadence in engine steps "
+                         "(default: the cache controller's update "
+                         "interval — one sample per decision window)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve the live metrics registry as Prometheus "
+                         "text on http://127.0.0.1:PORT/metrics (stdlib "
+                         "http.server; 0 picks an ephemeral port)")
+    ap.add_argument("--metrics-out", default="",
+                    help="append a final JSONL snapshot of the metrics "
+                         "registry (counters/gauges/histograms) to this "
+                         "path at exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="profile kernel dispatch: per-bucket block-"
+                         "selection calls, autotune cache hits/misses, "
+                         "compiles and measured us, printed as a table "
+                         "(and dumped to the trace when --trace-out)")
     args = ap.parse_args(argv)
+
+    demo_chaos = args.chaos is not None and not args.smoke \
+        and args.arch == "llama3_8b"
+    if demo_chaos:
+        # the bare `--chaos` sweep is a diagnostic demo: run it on the
+        # smoke config with the stack that exercises every code path the
+        # trace/numerics outputs exist to show — int8 packed pages
+        # (controller moves), a deliberately tight page arena
+        # (exhaustion -> preemption), a fast controller cadence
+        args.smoke = True
+        if args.cache_bits == 0:
+            args.cache_bits = 8
+        if args.page_size == 0:
+            args.page_size = 4
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode,
@@ -154,6 +196,32 @@ def main(argv=None):
     slots = args.slots or min(args.num_requests, 4)
     scfg = SamplerConfig(kind=args.sampler, temperature=args.temperature,
                          top_k=args.top_k if args.sampler == "top_k" else 0)
+
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    num_log = None
+    if args.numerics_log:
+        from repro.obs import NumericsLog
+        num_log = NumericsLog(args.numerics_log)
+    if args.profile:
+        from repro.kernels import dispatch
+        dispatch.profile_enable(True)
+
+    cache_cfg = None
+    n_pages = None
+    if demo_chaos and args.cache_bits:
+        from repro.serve import CacheQuantConfig
+        cache_cfg = CacheQuantConfig(width=args.cache_bits,
+                                     update_interval=4)
+        if args.page_size:
+            # under-provision the arena: roughly two slots' worth of
+            # pages short of full residency, so concurrent decode
+            # exhausts it and the preemption path shows up on the trace
+            nblocks = -(-(max(lens) + args.max_new) // args.page_size)
+            n_pages = 1 + nblocks * max(slots - 2, 1)
+
     harness = None
     if args.chaos is not None:
         harness = FaultHarness(
@@ -164,10 +232,18 @@ def main(argv=None):
     eng = ServeEngine(cfg, policy, params, max_slots=slots,
                       max_len=max(lens) + args.max_new,
                       cache_bits=args.cache_bits, sampler_cfg=scfg,
+                      cache_cfg=cache_cfg, n_pages=n_pages,
                       seed=args.seed,
                       queue_cap=args.queue_cap or None,
                       deadline_ms=args.deadline_ms or None,
-                      faults=harness)
+                      faults=harness,
+                      tracer=tracer, numerics_log=num_log,
+                      numerics_every=args.numerics_every or None)
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs import start_http_server
+        server = start_http_server(eng.metrics.registry, args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{server.server_address[1]}/metrics")
     uids = []
     for i in range(args.num_requests):
         plen = lens[i % len(lens)]
@@ -195,6 +271,29 @@ def main(argv=None):
             with open(args.fault_log, "w") as f:
                 json.dump(harness.summary(), f, indent=2)
             print(f"fault log written to {args.fault_log}")
+    if args.profile:
+        from repro.kernels import dispatch
+        if tracer is not None:
+            dispatch.profile_trace_counters(tracer)
+        print("dispatch profile:")
+        print(dispatch.profile_table())
+    if tracer is not None:
+        spans = len(tracer.span_names())
+        tracer.export(args.trace_out)
+        print(f"trace: {spans} spans, {len(tracer.events)} events -> "
+              f"{args.trace_out}")
+    if num_log is not None:
+        from repro.obs import count_moves
+        print(f"numerics: {len(num_log.records)} records, "
+              f"{count_moves(num_log.records)} controller moves -> "
+              f"{args.numerics_log}")
+        num_log.close()
+    if args.metrics_out:
+        eng.metrics.registry.snapshot_jsonl(args.metrics_out,
+                                            {"final": True})
+        print(f"metrics snapshot appended to {args.metrics_out}")
+    if server is not None:
+        server.shutdown()
     return out
 
 

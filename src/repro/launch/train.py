@@ -70,6 +70,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--numerics-log", default="",
+                    help="write the §5 numeric-health timeline (per-tensor-"
+                         "class exponents, overflow rates, controller "
+                         "up/down moves) as JSONL to this path")
+    ap.add_argument("--numerics-every", type=int, default=0,
+                    help="numerics sampling cadence in steps (default: the "
+                         "controller's --update-interval)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -108,8 +115,15 @@ def main(argv=None):
                                             params),
                              gs, policy, init_exp=init_exp)
 
+    num_log = None
+    num_every = args.numerics_every or args.update_interval
+    if args.numerics_log:
+        from repro.obs import NumericsLog
+        num_log = NumericsLog(args.numerics_log)
+
     step_fn = jax.jit(make_train_step(loss_fn, gs, policy, opt_cfg,
-                                      microbatches=args.microbatches))
+                                      microbatches=args.microbatches,
+                                      numerics_tap=num_log is not None))
 
     # --- checkpoint / resume -------------------------------------------------
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -128,14 +142,24 @@ def main(argv=None):
     signal.signal(signal.SIGINT, _preempt)
 
     # --- loop -----------------------------------------------------------------
-    t0 = time.time()
+    # perf_counter: the step-rate readout is a delta, keep it monotonic
+    t0 = time.perf_counter()
     for i in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
         state, metrics = step_fn(state, batch, jax.random.fold_in(key, i))
+        if num_log is not None and ((i + 1) % num_every == 0
+                                    or i + 1 == args.steps):
+            from repro.obs import train_records
+            tap = jax.device_get(metrics["numerics"])
+            for rec in train_records(tap["prev_exps"], tap["exps"],
+                                     tap["acc"], step=i + 1,
+                                     t=time.perf_counter() - t0):
+                num_log.record(rec)
         if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
             print(f"step {i+1}: loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
-                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)", flush=True)
+                  f"({(time.perf_counter()-t0)/(i-start+1):.2f}s/step)",
+                  flush=True)
         if mgr and ((i + 1) % args.ckpt_every == 0):
             mgr.save_async(i + 1, state)
         if stop["now"]:
@@ -147,6 +171,12 @@ def main(argv=None):
     if mgr:
         mgr.wait()
         mgr.save(args.steps, state)
+    if num_log is not None:
+        from repro.obs import count_moves
+        print(f"numerics: {len(num_log.records)} records, "
+              f"{count_moves(num_log.records)} controller moves -> "
+              f"{args.numerics_log}")
+        num_log.close()
     print("done")
     return state
 

@@ -13,6 +13,7 @@ from .kv_pool import (  # noqa: F401
     PackedKVCodec,
     insert,
     make_pool,
+    numerics_snapshot,
     overflow_summary,
     slot_overflow_rates,
 )

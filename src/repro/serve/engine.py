@@ -191,6 +191,22 @@ class ServeEngine:
         (:class:`repro.serve.faults.FaultHarness`) — injects NaN logits,
         KV bit flips, forced page exhaustion, and admission delays for
         chaos testing.  ``None`` in production.
+    tracer: optional :class:`repro.obs.Tracer` — records every engine
+        phase (submit/admit/prefill-chunk/decode-step/preempt/finish)
+        as span/instant events plus queue-depth counters, exportable as
+        Chrome-trace JSON.  ``None`` (the default) records nothing: all
+        hooks are guarded by a single ``is not None`` check — no device
+        syncs, no extra per-token host work, token streams bit-identical.
+    numerics_log: optional :class:`repro.obs.NumericsLog` (or a path
+        string) receiving the §5 numeric-health timeline: per-layer/
+        per-slot K/V exponents, overflow rates, and controller up/down
+        moves, sampled every ``numerics_every`` steps via one batched
+        jit + device fetch (``kv_pool.numerics_snapshot``) — a single
+        device sync per sample, nothing added to undisturbed steps.
+        Packed pools only (float32 pools have no controller to watch).
+    numerics_every: sampling cadence in engine steps; default: the
+        packed pool's controller ``update_interval`` (one sample per
+        controller decision window).
     """
 
     def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
@@ -205,7 +221,10 @@ class ServeEngine:
                  deadline_ms: Optional[float] = None,
                  runaway_ovf: Optional[float] = None,
                  max_preempts: int = 4,
-                 faults=None):
+                 faults=None,
+                 tracer=None,
+                 numerics_log=None,
+                 numerics_every: Optional[int] = None):
         if cfg.input_mode != "tokens" or cfg.encoder_layers:
             raise ValueError("ServeEngine serves token-in decoder models")
         if max_slots < 1:
@@ -299,6 +318,26 @@ class ServeEngine:
         self._auto_budget = True
         self._ovf = np.zeros(3, np.float64)   # harvested at request finish
         self.metrics = metrics.ServeMetrics()
+
+        # observability (every hook below guards on `is not None`; with
+        # all three unset the step loop is bit-identical to an unobserved
+        # engine — no spans, no samples, no extra syncs)
+        self._tracer = tracer
+        if tracer is not None and faults is not None and \
+                getattr(faults, "tracer", None) is None:
+            faults.tracer = tracer    # fault injections land on the trace
+        if isinstance(numerics_log, str):
+            from repro.obs import NumericsLog
+            numerics_log = NumericsLog(numerics_log)
+        self._numerics = numerics_log if self._packed else None
+        if numerics_every is not None:
+            self._num_every = max(int(numerics_every), 1)
+        elif self._packed:
+            self._num_every = max(int(self.cache_cfg.update_interval), 1)
+        else:
+            self._num_every = 1
+        self._num_prev: Optional[dict] = None
+        self._num_snap = None         # jitted numerics_snapshot, on demand
 
         # chunked prefill: attention-family only (MoE capacity and SSM
         # state couple a whole prompt; they keep the whole-prompt path)
@@ -424,10 +463,15 @@ class ServeEngine:
         uid = self._next_uid
         self._next_uid += 1
         self.metrics.on_submit(uid, prompt.size)
+        if self._tracer is not None:
+            self._tracer.instant("submit", tid="requests", uid=uid,
+                                 prompt_len=int(prompt.size))
         if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
             self._results[uid] = np.zeros(0, np.int32)
             self._status[uid] = RequestStatus.REJECTED
             self.metrics.on_reject(uid)
+            if self._tracer is not None:
+                self._tracer.instant("reject", tid="requests", uid=uid)
             return uid
         dl = deadline_ms if deadline_ms is not None else self.deadline_ms
         deadline = metrics._now() + dl / 1e3 if dl is not None else None
@@ -473,6 +517,10 @@ class ServeEngine:
         if self._packed and started:
             self._ovf += np.asarray(self._slot_tot(self._pool, slot),
                                     np.float64)
+        if self._tracer is not None:
+            self._tracer.instant("finish", tid="requests", uid=req.uid,
+                                 slot=slot, status=status.value,
+                                 new_tokens=len(self._gen[slot]))
         self._release_slot(slot)
 
     def _finish_queued(self, req: Request, status: RequestStatus) -> None:
@@ -480,6 +528,9 @@ class ServeEngine:
         self._results[req.uid] = np.asarray(list(req.carry), np.int32)
         self._status[req.uid] = status
         self.metrics.on_finish(req.uid, status.value)
+        if self._tracer is not None:
+            self._tracer.instant("finish", tid="requests", uid=req.uid,
+                                 status=status.value)
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
         """Finish the slot if its budget is spent or ``tok`` is its EOS."""
@@ -503,6 +554,17 @@ class ServeEngine:
         ``max_preempts`` resolves FAILED instead (thrash bound).
         """
         req = self._reqs[victim]
+        if self._tracer is not None:
+            self._tracer.begin("preempt", uid=req.uid, slot=victim,
+                               n_preempt=req.n_preempt)
+            try:
+                self._preempt_impl(victim, req)
+            finally:
+                self._tracer.end()
+        else:
+            self._preempt_impl(victim, req)
+
+    def _preempt_impl(self, victim: int, req: Request) -> None:
         if req.n_preempt >= self.max_preempts:
             self._finish(victim, RequestStatus.FAILED)
             return
@@ -591,6 +653,9 @@ class ServeEngine:
         self._admit_counter += 1
         self._seq[slot] = self._admit_counter
         self.metrics.on_admit(req.uid)
+        if self._tracer is not None:
+            self._tracer.instant("admitted", tid="requests", uid=req.uid,
+                                 slot=slot)
 
     def _admit(self) -> None:
         """Fill free slots from the queue, grouping equal prompt lengths."""
@@ -727,14 +792,33 @@ class ServeEngine:
         """Admit what fits, run one prefill chunk (chunked mode), then
         decode one token on every active slot."""
         self._step_idx += 1
+        tr = self._tracer
         if self._faults is not None:
             self._faults.on_step(self)
         self._expire_queue()
         if self.prefill_chunk:
-            self._admit_chunked()
-            self._step_prefill_chunk()
+            if tr is None:
+                self._admit_chunked()
+                self._step_prefill_chunk()
+            else:
+                tr.begin("admit", queued=len(self._queue))
+                self._admit_chunked()
+                tr.end()
+                if self._prefilling:
+                    s = self._prefilling[0]
+                    tr.begin("prefill_chunk", uid=self._reqs[s].uid,
+                             slot=int(s), p0=int(self._pfill[s]))
+                    try:
+                        self._step_prefill_chunk()
+                    finally:
+                        tr.end()
         else:
-            self._admit()
+            if tr is None:
+                self._admit()
+            else:
+                tr.begin("admit", queued=len(self._queue))
+                self._admit()
+                tr.end()
         if self._active.any():
             nan_mask = np.zeros(self.max_slots, bool)
             if self._faults is not None:
@@ -748,6 +832,8 @@ class ServeEngine:
                     if self._active[s]:   # earlier preemption may clear it
                         self._ensure_blocks_safe(s, int(self._pos[s]), 1)
         if self._active.any():
+            if tr is not None:
+                tr.begin("decode_step", n_active=int(self._active.sum()))
             if self.prefill_chunk:
                 nxt, bad, rate, self._pool = self._decode(
                     self._pool, jnp.asarray(self._tok),
@@ -779,7 +865,42 @@ class ServeEngine:
                 self._tok[s] = tok
                 self.metrics.on_token(self._reqs[s].uid)
                 self._maybe_finish(s, tok)
+            if tr is not None:
+                tr.end()
         self._expire_inflight()
+        if tr is not None:
+            tr.counter("queue", {"queue_depth": len(self._queue),
+                                 "active_slots": int(self._active.sum())})
+        if self._numerics is not None and \
+                self._step_idx % self._num_every == 0:
+            self._sample_numerics()
+
+    def _sample_numerics(self) -> None:
+        """One §5 numeric-health sample: a single batched device fetch of
+        the packed pool's exponents + overflow counters, diffed against
+        the previous sample into per-slot JSONL records (controller
+        up/down moves).  Runs only on the sampling cadence with a
+        ``numerics_log`` attached — never on an unobserved step."""
+        from repro.obs import serve_records
+        if self._num_snap is None:
+            self._num_snap = jax.jit(
+                lambda pool: kv_pool.numerics_snapshot(pool, self.max_slots))
+        snap = jax.device_get(self._num_snap(self._pool))
+        uids = {s: self._reqs[s].uid for s in range(self.max_slots)
+                if self._reqs[s] is not None and self._active[s]}
+        if uids:
+            recs = serve_records(snap, self._num_prev, step=self._step_idx,
+                                 t=metrics._now(), slot_uids=uids)
+            for rec in recs:
+                self._numerics.record(rec)
+            if self._tracer is not None and recs:
+                rates = [r for rec in recs for r in rec["ovf_rate"]]
+                exps = [e for rec in recs for e in rec["k_e"]]
+                self._tracer.counter(
+                    "numerics", {"ovf_rate_max": max(rates),
+                                 "k_e_mean": sum(exps) / len(exps)},
+                    tid="numerics")
+        self._num_prev = snap
 
     def _drain_timeout(self) -> None:
         """Out of steps: resolve everything in flight instead of raising.

@@ -116,13 +116,19 @@ class FaultHarness:
     poisoning).  ``log`` accumulates one JSON-able dict per event.
     """
 
-    def __init__(self, faults, seed: int = 0):
+    def __init__(self, faults, seed: int = 0, tracer=None):
         self.faults = list(faults)
         self.seed = seed
         self.log: List[dict] = []
+        # optional repro.obs.Tracer: every injected fault also lands as
+        # an instant on the trace's "faults" track (the engine attaches
+        # its tracer here when it has one)
+        self.tracer = tracer
 
     def _event(self, kind: str, **kw) -> None:
         self.log.append({"kind": kind, **kw})
+        if self.tracer is not None:
+            self.tracer.instant(f"fault:{kind}", tid="faults", **kw)
 
     # -- engine hooks -----------------------------------------------------
     def on_step(self, eng) -> None:

@@ -27,7 +27,7 @@ is bit-identical to today's float32 ring buffers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -515,6 +515,51 @@ def slot_overflow_rates(pool: dict, n_slots: int) -> Array:
                 ovf = ovf + jnp.sum(t[..., 0], axis=0)
                 tot = tot + jnp.sum(t[..., 2], axis=0)
     return ovf / jnp.maximum(tot, 1.0)
+
+
+def numerics_snapshot(pool: dict, n_slots: int) -> dict:
+    """Per-layer/per-slot §5 exponents + overflow counters, jit-safe.
+
+    The serve-side numeric-health sample (:mod:`repro.obs.numerics`): for
+    every packed attention entry, f32 ``[n_layers, n_slots]`` arrays
+
+    * ``k_e`` / ``v_e`` — the controller-managed shared exponents.  Paged
+      pools store exponents per PAGE; each slot reports its *newest*
+      mapped page's exponent (the one current appends quantize against —
+      where the controller is acting);
+    * ``ovf`` / ``half`` / ``tot`` — cumulative append counters
+      (overflowed, would-overflow-at-half-range, quantized) summed over
+      K+V, gathered through the block table for paged pools.
+
+    Keyed ``"sname/bkey"`` per entry; empty dict for float32 pools.  The
+    engine jits this once and fetches one sample per controller interval
+    — a single batched device sync, nothing added per step.
+    """
+    out: Dict[str, dict] = {}
+    for sname, sc in pool.items():
+        for bkey, e in sc.items():
+            if not isinstance(e, dict) or "k_m" not in e or "tot_k" not in e:
+                continue
+            if "bt" in e:                 # paged: gather via block table
+                bt = e["bt"]                              # [n, B, nblocks]
+                # newest mapped page per slot (page 0 is the null page)
+                last = jnp.maximum(jnp.sum(bt != 0, axis=-1) - 1, 0)
+                newest = jnp.take_along_axis(bt, last[..., None],
+                                             axis=-1)[..., 0]   # [n, B]
+                k_e = jnp.take_along_axis(e["k_e"], newest, axis=1)
+                v_e = jnp.take_along_axis(e["v_e"], newest, axis=1)
+                g = jax.vmap(lambda tl, btl: tl[btl])(
+                    e["tot_k"], bt) + jax.vmap(lambda tl, btl: tl[btl])(
+                    e["tot_v"], bt)                       # [n, B, nblk, 3]
+                cnt = jnp.sum(g, axis=2)                  # [n, B, 3]
+            else:                         # slot-major: direct per-slot
+                k_e, v_e = e["k_e"], e["v_e"]             # [n, B]
+                cnt = e["tot_k"] + e["tot_v"]             # [n, B, 3]
+            out[f"{sname}/{bkey}"] = {
+                "k_e": k_e[:, :n_slots], "v_e": v_e[:, :n_slots],
+                "ovf": cnt[:, :n_slots, 0], "half": cnt[:, :n_slots, 1],
+                "tot": cnt[:, :n_slots, 2]}
+    return out
 
 
 def slot_totals(pool: dict, slot) -> Array:

@@ -7,12 +7,26 @@ decode throughput — plus the packed pool's cumulative cache overflow rate
 (see ``kv_pool.overflow_summary``) and the robustness counters the
 admission-control/preemption/quarantine layer feeds (rejected, timed
 out, preempted, failed, queue-depth high-water mark).
+
+Timestamps come from ``time.perf_counter()`` — monotonic, so TTFT and
+queue-wait survive NTP steps and wall-clock slews (stamps are deltas
+against other stamps from the same process, never absolute times).
+
+Every hook also records into a :class:`repro.obs.metrics.MetricsRegistry`
+(``self.registry``): counters for the robustness events, a queue-depth
+gauge, and log-bucketed histograms (TTFT, queue wait, inter-decode-step
+latency, per-request tok/s) — the series ``launch.serve --metrics-port``
+exposes as Prometheus text and ``--metrics-out`` snapshots as JSONL.
+``summary()`` still aggregates from the per-request traces, so its
+schema and values are unchanged by the registry.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Dict, Optional
+
+from repro.obs.metrics import MetricsRegistry
 
 
 def _now() -> float:
@@ -42,35 +56,98 @@ class RequestTrace:
 
 
 class ServeMetrics:
-    """Collects request traces; ``summary()`` aggregates them."""
+    """Collects request traces; ``summary()`` aggregates them.
 
-    def __init__(self):
+    Event counts live in ``self.registry`` (shared with the CLI's
+    Prometheus endpoint when one is passed in); the legacy attribute
+    names (``decode_steps``, ``rejected``...) remain as read-only
+    properties over the registry.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
         self.traces: Dict[int, RequestTrace] = {}
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
-        self.decode_steps: int = 0
-        self.rejected: int = 0
-        self.timed_out: int = 0
-        self.preemptions: int = 0     # preemption EVENTS (one uid may repeat)
-        self.failed: int = 0          # quarantined (numeric sentinel) + OOM
-        self.queue_depth_peak: int = 0
+        self._t_last_step: Optional[float] = None
+        r = self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._c_submitted = r.counter(
+            "serve_requests_submitted", "requests entered via submit()")
+        self._c_finished = r.counter(
+            "serve_requests_finished", "requests resolved OK")
+        self._c_rejected = r.counter(
+            "serve_requests_rejected", "admission control bounces")
+        self._c_timed_out = r.counter(
+            "serve_requests_timed_out", "deadline / drain expiries")
+        self._c_failed = r.counter(
+            "serve_requests_failed", "quarantined / exhausted requests")
+        self._c_preempt = r.counter(
+            "serve_preemptions", "page-pressure eviction events")
+        self._c_tokens = r.counter(
+            "serve_new_tokens", "generated tokens across requests")
+        self._c_steps = r.counter(
+            "serve_decode_steps", "batched decode steps run")
+        self._c_chunks = r.counter(
+            "serve_prefill_chunks", "prefill chunks run")
+        self._g_queue = r.gauge(
+            "serve_queue_depth", "waiting queue length at last submit")
+        self._h_ttft = r.histogram(
+            "serve_ttft_seconds", "submit -> first token")
+        self._h_wait = r.histogram(
+            "serve_queue_wait_seconds", "submit -> first admission")
+        self._h_step = r.histogram(
+            "serve_decode_step_seconds", "inter-decode-step latency")
+        self._h_tps = r.histogram(
+            "serve_request_tok_per_s", "per-request decode throughput",
+            lo=0.25)
+
+    # -- legacy attribute views over the registry --------------------------
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c_steps.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def timed_out(self) -> int:
+        return int(self._c_timed_out.value)
+
+    @property
+    def preemptions(self) -> int:
+        # preemption EVENTS (one uid may repeat)
+        return int(self._c_preempt.value)
+
+    @property
+    def failed(self) -> int:
+        # quarantined (numeric sentinel) + OOM
+        return int(self._c_failed.value)
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return int(self._g_queue.peak)
 
     # -- engine hooks -----------------------------------------------------
     def on_submit(self, uid: int, prompt_len: int) -> None:
         self.traces[uid] = RequestTrace(uid, prompt_len, _now())
+        self._c_submitted.inc()
 
     def on_admit(self, uid: int) -> None:
         tr = self.traces[uid]
         if tr.t_admit is None:        # re-admission after preemption keeps
             tr.t_admit = _now()       # the first admit stamp (true wait)
+            self._h_wait.observe(tr.queue_wait)
         if self.t_start is None:
             self.t_start = _now()
 
     def on_token(self, uid: int) -> None:
         tr = self.traces[uid]
         tr.new_tokens += 1
+        self._c_tokens.inc()
         if tr.t_first is None:
             tr.t_first = _now()
+            self._h_ttft.observe(tr.ttft)
 
     def on_prefill_chunk(self, uid: int) -> None:
         """Chunked-prefill mode: one chunk of this request's prompt ran.
@@ -81,33 +158,44 @@ class ServeMetrics:
         interpretable (chunks × step time, interleaved with decode).
         """
         self.traces[uid].prefill_chunks += 1
+        self._c_chunks.inc()
 
     def on_finish(self, uid: int, status: str = "ok") -> None:
         tr = self.traces[uid]
         tr.t_finish = self.t_end = _now()
         tr.status = status
         if status == "timed_out":
-            self.timed_out += 1
+            self._c_timed_out.inc()
         elif status == "failed":
-            self.failed += 1
+            self._c_failed.inc()
+        elif status == "ok":
+            self._c_finished.inc()
+        if tr.t_admit is not None and tr.new_tokens:
+            span = tr.t_finish - tr.t_admit
+            if span > 0:
+                self._h_tps.observe(tr.new_tokens / span)
 
     def on_reject(self, uid: int) -> None:
         """Admission control bounced the request (queue full)."""
         tr = self.traces[uid]
         tr.t_finish = _now()
         tr.status = "rejected"
-        self.rejected += 1
+        self._c_rejected.inc()
 
     def on_preempt(self, uid: int) -> None:
         """The request lost its slot/pages and went back to the queue."""
         self.traces[uid].preempts += 1
-        self.preemptions += 1
+        self._c_preempt.inc()
 
     def on_decode_step(self) -> None:
-        self.decode_steps += 1
+        self._c_steps.inc()
+        t = _now()
+        if self._t_last_step is not None:
+            self._h_step.observe(t - self._t_last_step)
+        self._t_last_step = t
 
     def observe_queue_depth(self, depth: int) -> None:
-        self.queue_depth_peak = max(self.queue_depth_peak, depth)
+        self._g_queue.set(depth)
 
     # -- aggregates -------------------------------------------------------
     def summary(self, extra: Optional[dict] = None) -> dict:

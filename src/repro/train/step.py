@@ -90,8 +90,17 @@ def make_train_step(
     microbatches: int = 1,
     compute_dtype=jnp.float32,
     grad_transform: Optional[Callable] = None,   # e.g. DFXP compression
+    numerics_tap: bool = False,
 ):
-    """Build ``step(state, batch, rng) -> (state, metrics)``."""
+    """Build ``step(state, batch, rng) -> (state, metrics)``.
+
+    ``numerics_tap=True`` adds a ``metrics["numerics"]`` sub-dict carrying
+    the §5 controller's inputs and outputs out of the jit — per-group
+    exponents before/after the controller and the window accumulators the
+    decision was made from (captured BEFORE the post-apply reset).  The
+    host feeds it to :func:`repro.obs.numerics.train_records` on the
+    logging cadence; off (the default) the metrics pytree is unchanged.
+    """
     dyn = policy.dynamic
     quant_params = policy.enabled and policy.arithmetic in ("fixed", "dfxp")
 
@@ -229,8 +238,10 @@ def make_train_step(
 
         # ---- scale controller ----------------------------------------------
         new_scale = state.scale
+        acc_window = None
         if dyn:
             new_scale = accumulate(new_scale, all_stats)
+            acc_window = new_scale.acc    # pre-reset §5 window accumulators
             apply = (state.step + 1) % policy.update_interval == 0
             new_scale = controller_step(
                 new_scale, max_overflow_rate=policy.max_overflow_rate,
@@ -238,6 +249,12 @@ def make_train_step(
 
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "step": state.step.astype(jnp.float32)}
+        if numerics_tap:
+            metrics["numerics"] = {
+                "prev_exps": state.scale.exps,
+                "exps": new_scale.exps,
+                "acc": acc_window if acc_window is not None else {},
+            }
         return TrainState(params=new_params, opt=new_opt, scale=new_scale,
                           step=state.step + 1), metrics
 
