@@ -1,2 +1,4 @@
 """Elastic checkpointing: manifest + per-leaf arrays, restore-with-reshard."""
-from .manager import CheckpointManager, restore_tree, save_tree  # noqa: F401
+from .manager import (CheckpointError, CheckpointManager,  # noqa: F401
+                      CheckpointWriteError, LeafCorruptError,
+                      LeafMismatchError, restore_tree, save_tree)

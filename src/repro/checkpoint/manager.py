@@ -3,7 +3,7 @@
 Layout per step::
 
     <dir>/step_000100/
-        manifest.json      # tree structure, shapes, dtypes, leaf → file
+        manifest.json      # tree structure, per-leaf shape/dtype/CRC32/file
         <leaf-id>.npy      # one .npy per leaf (host-gathered global array)
         _COMMITTED         # written last: restore ignores torn checkpoints
 
@@ -12,12 +12,24 @@ Design points for the 1000-node story:
     manifest records logical shape/dtype only. ``restore_tree`` device_puts
     onto whatever mesh/sharding the *new* job provides — restarting on a
     different pod count (after node loss) reshards transparently.
-  * **Atomicity**: `_COMMITTED` marker written after all leaves; the
-    manager's `latest()` skips uncommitted dirs, so a preemption mid-save
-    falls back to the previous step.
-  * **Async**: `save_async` snapshots to host memory synchronously (cheap)
-    and writes files on a background thread, overlapping the next step.
-  * **Retention**: keeps the newest ``keep`` committed checkpoints.
+  * **Integrity**: every leaf file carries a CRC32 in the manifest,
+    verified on restore; a flipped bit on disk surfaces as a typed
+    :class:`LeafCorruptError` naming the leaf instead of silently loading
+    garbage into the optimizer.
+  * **Durability**: every leaf file and the manifest are fsync'd, the
+    directory is fsync'd, the tmp dir is atomically renamed into place,
+    and only then is ``_COMMITTED`` written (and fsync'd).  A power cut
+    at any point leaves either the previous checkpoint or a torn,
+    ignored directory — never a committed lie.
+  * **Async**: ``save_async`` snapshots to host memory synchronously
+    (cheap) and writes files on a background thread, overlapping the next
+    step.  A background-write failure is captured and re-raised on the
+    next :meth:`~CheckpointManager.wait` / ``save_async`` — never
+    swallowed.
+  * **Retry**: transient write failures back off and retry
+    (``retries``/``backoff_s``) before giving up.
+  * **Retention**: keeps the newest ``keep`` committed checkpoints; the
+    newest committed dir is never deleted, even mid-save of its successor.
   * Multi-host note: in a real multi-controller job each host would write
     only the shards it owns (`jax.experimental.multihost_utils`); in this
     single-controller container the process gathers full arrays.
@@ -27,11 +39,14 @@ they're ordinary pytree nodes whose leaves are int16 mantissas + exps.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import time
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -39,52 +54,157 @@ import numpy as np
 Array = jax.Array
 
 
-def _flatten(tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint integrity/IO failures."""
 
 
-def save_tree(tree: Any, path: str) -> None:
-    """Synchronous atomic save of a pytree of arrays."""
+class LeafMismatchError(CheckpointError):
+    """Checkpoint structure does not match the restore template
+    (leaf count, or a leaf's shape/dtype), naming the offending leaf."""
+
+
+class LeafCorruptError(CheckpointError):
+    """A leaf file's bytes do not match the manifest CRC32."""
+
+
+class CheckpointWriteError(CheckpointError):
+    """A (possibly background) checkpoint write failed after retries."""
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) or "<root>"
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_tree(tree: Any, path: str, *, fail_hook: Optional[Callable] = None,
+              ) -> None:
+    """Synchronous atomic save of a pytree of arrays.
+
+    Write ordering (the durability contract): leaves + manifest into a
+    ``.tmp`` dir, fsync every file, fsync the dir, ``os.replace`` into
+    place, fsync the parent, and only then write + fsync ``_COMMITTED``.
+    A crash anywhere before the marker leaves a torn dir that
+    ``all_steps`` ignores.
+
+    ``fail_hook(i)`` — fault-injection point for the chaos harness,
+    called before writing leaf ``i``; it may raise to simulate a writer
+    dying mid-save.
+    """
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    leaves, treedef = _flatten(tree)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     manifest = {"treedef": str(treedef), "leaves": []}
-    for i, leaf in enumerate(leaves):
+    for i, (leaf_path, leaf) in enumerate(leaves):
+        if fail_hook is not None:
+            fail_hook(i)
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        with open(fpath, "rb") as f:
+            crc = zlib.crc32(f.read())
+        _fsync_file(fpath)
         manifest["leaves"].append(
-            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            {"file": fname, "name": _leaf_name(leaf_path),
+             "shape": list(arr.shape), "dtype": str(arr.dtype),
+             "crc32": crc})
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
-    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
-        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
+    parent = os.path.dirname(os.path.abspath(path))
+    _fsync_dir(parent)
+    cpath = os.path.join(path, "_COMMITTED")
+    with open(cpath, "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(path)
 
 
-def restore_tree(template: Any, path: str, shardings: Any = None) -> Any:
+def restore_tree(template: Any, path: str, shardings: Any = None, *,
+                 verify: bool = True) -> Any:
     """Restore into ``template``'s structure; reshard onto ``shardings``.
 
     ``template`` may hold arrays or ShapeDtypeStructs; ``shardings`` (a
     matching pytree of NamedShardings, or None) controls placement — pass
     the *new* mesh's shardings to reshard elastically.
+
+    Raises typed :class:`CheckpointError`\\ s naming the offending leaf:
+    :class:`LeafMismatchError` on a leaf-count/shape/dtype mismatch with
+    the template, :class:`LeafCorruptError` when a leaf file fails its
+    manifest CRC32 (``verify=False`` skips the CRC pass only).
     """
-    leaves_t, treedef = _flatten(template)
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    assert len(manifest["leaves"]) == len(leaves_t), \
-        f"checkpoint has {len(manifest['leaves'])} leaves, template {len(leaves_t)}"
+    if len(manifest["leaves"]) != len(leaves_t):
+        raise LeafMismatchError(
+            f"checkpoint {path} has {len(manifest['leaves'])} leaves, "
+            f"template has {len(leaves_t)}")
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves_t))
     out = []
     for meta, tmpl, sh in zip(manifest["leaves"], leaves_t, shard_leaves):
-        arr = np.load(os.path.join(path, meta["file"]))
-        assert tuple(arr.shape) == tuple(tmpl.shape), (arr.shape, tmpl.shape)
+        name = meta.get("name", meta["file"])
+        fpath = os.path.join(path, meta["file"])
+        try:
+            with open(fpath, "rb") as f:
+                raw = f.read()
+        except OSError as e:
+            raise LeafCorruptError(
+                f"leaf {name!r}: cannot read {fpath}: {e}") from e
+        if verify and "crc32" in meta:
+            crc = zlib.crc32(raw)
+            if crc != meta["crc32"]:
+                raise LeafCorruptError(
+                    f"leaf {name!r}: CRC32 mismatch in {fpath} "
+                    f"(manifest {meta['crc32']:#010x}, file {crc:#010x})")
+        try:
+            arr = np.load(io.BytesIO(raw))
+        except Exception as e:
+            raise LeafCorruptError(
+                f"leaf {name!r}: {fpath} is not a loadable .npy: {e}") from e
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise LeafMismatchError(
+                f"leaf {name!r}: checkpoint shape {tuple(arr.shape)} != "
+                f"template shape {tuple(tmpl.shape)}")
+        if np.dtype(meta["dtype"]) != np.dtype(tmpl.dtype):
+            raise LeafMismatchError(
+                f"leaf {name!r}: checkpoint dtype {meta['dtype']} != "
+                f"template dtype {np.dtype(tmpl.dtype)}")
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
@@ -93,11 +213,16 @@ def restore_tree(template: Any, path: str, shardings: Any = None) -> Any:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, *, retries: int = 2,
+                 backoff_s: float = 0.05):
         self.dir = directory
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._inject_fail_saves = 0     # chaos harness: fail next N attempts
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")
@@ -105,43 +230,134 @@ class CheckpointManager:
     def all_steps(self):
         steps = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and os.path.exists(
-                    os.path.join(self.dir, d, "_COMMITTED")):
-                steps.append(int(d.split("_")[1]))
+            if not d.startswith("step_"):
+                continue
+            try:
+                step = int(d.split("_", 1)[1])
+            except ValueError:
+                continue               # .tmp / quarantined dirs
+            if os.path.exists(os.path.join(self.dir, d, "_COMMITTED")):
+                steps.append(step)
         return sorted(steps)
 
     def latest(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # -- fault injection (train/faults.CkptTear) ---------------------------
+    def inject_failure(self, count: Optional[int] = None) -> None:
+        """Make the next ``count`` save *attempts* die mid-write (default:
+        enough to exhaust the retry budget, so the failure surfaces)."""
+        self._inject_fail_saves = (count if count is not None
+                                   else self.retries + 1)
+
+    def _fail_hook(self, leaf_i: int) -> None:
+        if self._inject_fail_saves > 0 and leaf_i == 1:
+            self._inject_fail_saves -= 1
+            raise CheckpointWriteError(
+                "injected writer death mid-save (chaos harness)")
+
+    # -- save/restore ------------------------------------------------------
+    def _save_with_retry(self, step: int, tree: Any) -> None:
+        path = self._step_dir(step)
+        for attempt in range(self.retries + 1):
+            try:
+                save_tree(tree, path, fail_hook=self._fail_hook)
+                return
+            except Exception as e:
+                shutil.rmtree(path + ".tmp", ignore_errors=True)
+                if attempt == self.retries:
+                    raise CheckpointWriteError(
+                        f"checkpoint save of step {step} failed after "
+                        f"{attempt + 1} attempts: {e}") from e
+                time.sleep(self.backoff_s * (2 ** attempt))
+
     def save(self, step: int, tree: Any) -> None:
-        save_tree(tree, self._step_dir(step))
+        self._save_with_retry(step, tree)
         self._gc()
 
     def save_async(self, step: int, tree: Any) -> None:
-        """Snapshot to host now; write in the background."""
+        """Snapshot to host now; write in the background.
+
+        Raises any pending error from the *previous* background write
+        (via the implicit :meth:`wait`) before starting the new one.
+        """
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
-        self._thread = threading.Thread(
-            target=lambda: (save_tree(host_tree, self._step_dir(step)),
-                            self._gc()),
-            daemon=True)
+
+        def _bg():
+            try:
+                self._save_with_retry(step, host_tree)
+                self._gc()
+            except BaseException as e:          # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_bg, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight background save; re-raise its failure."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Any:
-        step = step if step is not None else self.latest()
-        if step is None:
+        """Restore ``step`` (raises on any integrity error), or — with
+        ``step=None`` — the newest committed step that passes
+        verification, falling back to older committed steps past corrupt
+        ones (:meth:`restore_latest`)."""
+        if step is not None:
+            return restore_tree(template, self._step_dir(step), shardings)
+        tree, _ = self.restore_latest(template, shardings)
+        return tree
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        """Restore the newest committed checkpoint that verifies clean.
+
+        Returns ``(tree, step)``.  A committed dir that fails restore
+        (CRC corruption, torn content) is quarantined — renamed to
+        ``corrupt_<name>`` so it is never retried but the evidence
+        survives — and the walk falls back to the previous committed
+        step.  Raises ``FileNotFoundError`` when no committed checkpoint
+        exists and :class:`CheckpointError` when all of them are corrupt.
+        """
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        return restore_tree(template, self._step_dir(step), shardings)
+        last_err: Optional[CheckpointError] = None
+        for s in reversed(steps):
+            path = self._step_dir(s)
+            try:
+                return restore_tree(template, path, shardings), s
+            except CheckpointError as e:
+                last_err = e
+                quarantine = os.path.join(
+                    self.dir, f"corrupt_{os.path.basename(path)}")
+                shutil.rmtree(quarantine, ignore_errors=True)
+                try:
+                    os.replace(path, quarantine)
+                except OSError:
+                    shutil.rmtree(path, ignore_errors=True)
+        raise CheckpointError(
+            f"all {len(steps)} committed checkpoints in {self.dir} failed "
+            f"verification; newest error: {last_err}")
 
     def _gc(self) -> None:
+        """Prune to the newest ``keep`` committed steps.
+
+        The newest committed dir is never deleted — even with
+        ``keep=0``/``keep=1`` while its successor is still mid-save
+        (uncommitted dirs are invisible to ``all_steps``, so the newest
+        *committed* step stays the restore anchor until the successor's
+        ``_COMMITTED`` lands).
+        """
+        if not self.keep:
+            return
         steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
+        for s in steps[:-max(self.keep, 1)]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -79,6 +79,21 @@ def compress_decompress(
     return q.astype(g.dtype), r_new.astype(r.dtype)
 
 
+def ef_init(params):
+    """Zero error-feedback residuals matching ``params``' *compute* view.
+
+    Residuals live at the wire's precision (f32), not the storage
+    container's — a :class:`~repro.core.packed.PackedArray` leaf maps to
+    an f32 zeros array of its logical shape.  This is the tree a
+    checkpointed trainer must save/restore for bit-exact resume of
+    compressed-gradient training.
+    """
+    from repro.core.packed import PackedArray
+
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params,
+                        is_leaf=lambda x: isinstance(x, PackedArray))
+
+
 def compress_tree(g, r, bits: int, axis_name=None, *,
                   stochastic_key: Optional[Array] = None):
     """:func:`compress_decompress` over a pytree, one scale per leaf.

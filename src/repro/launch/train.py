@@ -1,14 +1,23 @@
-"""Training driver: calibrate → DFXP train, with fault tolerance.
+"""Training driver: calibrate → supervised DFXP train, fault-tolerant.
 
-Fault-tolerance contract:
-  * checkpoint every ``--ckpt-every`` steps (async, atomic, keeps 3);
-  * SIGTERM/SIGINT (preemption) → synchronous final checkpoint → exit 143;
-  * restart with the same ``--ckpt-dir`` resumes from the latest committed
-    step; the data pipeline is deterministic in (seed, step), so the token
-    stream continues exactly where it left off;
-  * restore reshards onto whatever mesh the new job has (elastic).
+Fault-tolerance contract (the serve engine's, mirrored for training):
+  * every step resolves to an outcome — OK / SKIPPED (device-side
+    sentinel tripped, update discarded in-jit) / ROLLED_BACK (skip
+    budget exhausted → restore last committed checkpoint, keep the
+    advanced data cursor) / HALTED (rollback failed twice → diagnostic
+    bundle) — and a per-run outcome table prints at exit;
+  * checkpoint every ``--ckpt-every`` steps (async, atomic, CRC32'd,
+    fsync'd, keeps ``--keep``); the saved tree covers params/opt/DFXP
+    scales + §5 windows, the stochastic-rounding PRNG key, dist
+    error-feedback buffers, and the data cursor — resume is bit-exact;
+  * SIGTERM/SIGINT (preemption) → synchronous final checkpoint → 143;
+  * restart with the same ``--ckpt-dir`` resumes from the latest clean
+    committed step, walking past (and quarantining) corrupt ones;
+  * ``--chaos [SEED]`` runs a seeded fault plan (NaN gradients, loss
+    spikes, checkpoint tears, param bit flips) through the harness; the
+    run must still resolve every step and exit 0.
 
-CPU-runnable example (see examples/train_lm.py for the wrapped version):
+CPU-runnable example:
   PYTHONPATH=src python -m repro.launch.train --arch granite_moe_1b \
       --smoke --steps 50 --global-batch 8 --seq-len 64 --arithmetic dfxp
 """
@@ -16,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import signal
 import sys
 import time
@@ -28,8 +38,9 @@ from repro.checkpoint import CheckpointManager
 from repro.core.policy import PrecisionPolicy
 from repro.data import SyntheticLM
 from repro.models import transformer as T
-from repro.optim.opt import OptConfig, sgd_init
-from repro.train import init_train_state, make_train_step
+from repro.optim.opt import OptConfig, adamw_init, sgd_init
+from repro.train import (FaultHarness, Kill, StepOutcome, TrainSupervisor,
+                         chaos_plan, init_train_state)
 from repro.train.calibrate import calibrate
 
 
@@ -66,8 +77,38 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    # -- resilience ---------------------------------------------------------
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3,
+                    help="retained committed checkpoints (newest never GC'd)")
+    ap.add_argument("--resume", default="auto",
+                    choices=["auto", "never", "must"],
+                    help="auto: resume when a committed checkpoint exists; "
+                         "never: start fresh; must: fail fast if nothing "
+                         "committed is restorable")
+    ap.add_argument("--skip-budget", type=int, default=3,
+                    help="consecutive sentinel-skipped steps tolerated "
+                         "before rolling back to the last checkpoint")
+    ap.add_argument("--runaway-ovf", type=float, default=0.0,
+                    help="per-tensor-class §5 overflow-rate sentinel "
+                         "threshold (0 disables)")
+    ap.add_argument("--grad-compress-bits", type=int, default=0,
+                    help="run gradients through error-feedback compression "
+                         "at this width (residuals are checkpointed)")
+    ap.add_argument("--chaos", nargs="?", type=int, const=0, default=None,
+                    metavar="SEED",
+                    help="run a seeded fault plan through the train harness "
+                         "and print the fault log at exit")
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="SIGKILL the process at this data cursor (the CI "
+                         "train-resume smoke's crash injection)")
+    ap.add_argument("--fault-log", default="",
+                    help="write the harness fault/event log as JSON here")
+    ap.add_argument("--bundle-dir", default="",
+                    help="where a HALTED run writes its diagnostic bundle "
+                         "(default: <ckpt-dir>/bundle)")
+    # -- observability ------------------------------------------------------
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--numerics-log", default="",
@@ -101,37 +142,66 @@ def main(argv=None):
             return T.loss_fn(cfg, obs_policy, p, b, exps, s)
 
         params0 = T.init_params(cfg, key)
-        batches = ( {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-                    for i in range(args.calibrate_steps))
+        batches = ({k: jnp.asarray(v) for k, v in data.batch(i).items()}
+                   for i in range(args.calibrate_steps))
         init_exp = calibrate(obs_loss, params0, gs, policy, opt_cfg,
                              batches, steps=args.calibrate_steps)
         print(f"calibrated {len(init_exp)} scale groups")
 
     params = T.init_params(cfg, jax.random.fold_in(key, 1))
     state = init_train_state(params, sgd_init(params) if
-                             args.optimizer == "sgd" else
-                             __import__("repro.optim.opt",
-                                        fromlist=["adamw_init"]).adamw_init(
-                                            params),
+                             args.optimizer == "sgd" else adamw_init(params),
                              gs, policy, init_exp=init_exp)
 
     num_log = None
-    num_every = args.numerics_every or args.update_interval
     if args.numerics_log:
         from repro.obs import NumericsLog
         num_log = NumericsLog(args.numerics_log)
+    from repro.obs import MetricsRegistry, Tracer
+    tracer = Tracer()
+    metrics = MetricsRegistry()
 
-    step_fn = jax.jit(make_train_step(loss_fn, gs, policy, opt_cfg,
-                                      microbatches=args.microbatches,
-                                      numerics_tap=num_log is not None))
+    # --- fault harness ------------------------------------------------------
+    faults = []
+    if args.chaos is not None:
+        faults = chaos_plan(args.chaos, n_steps=args.steps,
+                            burst=args.skip_budget + 1)
+        print(f"chaos plan (seed {args.chaos}): "
+              f"{[type(f).__name__ for f in faults]}")
+    if args.kill_at:
+        faults.append(Kill(step=args.kill_at))
+    harness = (FaultHarness(faults, seed=args.chaos or 0, tracer=tracer,
+                            metrics=metrics) if faults else None)
 
-    # --- checkpoint / resume -------------------------------------------------
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    start = 0
-    if mgr and mgr.latest() is not None:
-        state = mgr.restore(state)
-        start = int(state.step)
-        print(f"resumed from step {start}")
+    mgr = (CheckpointManager(args.ckpt_dir, keep=args.keep)
+           if args.ckpt_dir else None)
+    bundle_dir = args.bundle_dir or (
+        args.ckpt_dir + "/bundle" if args.ckpt_dir else "train_bundle")
+
+    def batch_fn(cursor):
+        return {k: jnp.asarray(v) for k, v in data.batch(cursor).items()}
+
+    sup = TrainSupervisor(
+        loss_fn, gs, policy, opt_cfg, state,
+        batch_fn=batch_fn, rng=key,
+        manager=mgr, ckpt_every=args.ckpt_every,
+        skip_budget=args.skip_budget,
+        runaway_ovf=args.runaway_ovf or None,
+        compress_bits=args.grad_compress_bits or None,
+        microbatches=args.microbatches,
+        faults=harness, tracer=tracer, metrics=metrics,
+        numerics_log=num_log, numerics_every=args.numerics_every,
+        bundle_dir=bundle_dir)
+
+    # --- resume -------------------------------------------------------------
+    if args.resume != "never" and mgr is not None:
+        at = sup.resume()
+        if at is not None:
+            print(f"resumed from cursor {at}")
+        elif args.resume == "must":
+            print("error: --resume must, but nothing restorable",
+                  file=sys.stderr)
+            return sys.exit(2)
 
     stop = {"now": False}
 
@@ -141,44 +211,46 @@ def main(argv=None):
     signal.signal(signal.SIGTERM, _preempt)
     signal.signal(signal.SIGINT, _preempt)
 
-    # --- loop -----------------------------------------------------------------
-    # perf_counter: the step-rate readout is a delta, keep it monotonic
+    # --- supervised loop ----------------------------------------------------
     t0 = time.perf_counter()
-    for i in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        state, metrics = step_fn(state, batch, jax.random.fold_in(key, i))
-        if num_log is not None and ((i + 1) % num_every == 0
-                                    or i + 1 == args.steps):
-            from repro.obs import train_records
-            tap = jax.device_get(metrics["numerics"])
-            for rec in train_records(tap["prev_exps"], tap["exps"],
-                                     tap["acc"], step=i + 1,
-                                     t=time.perf_counter() - t0):
-                num_log.record(rec)
-        if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
-            print(f"step {i+1}: loss={float(metrics['loss']):.4f} "
-                  f"gnorm={float(metrics['grad_norm']):.3f} "
-                  f"({(time.perf_counter()-t0)/(i-start+1):.2f}s/step)",
-                  flush=True)
-        if mgr and ((i + 1) % args.ckpt_every == 0):
-            mgr.save_async(i + 1, state)
-        if stop["now"]:
-            print(f"preempted at step {i+1}: writing final checkpoint")
-            if mgr:
-                mgr.wait()
-                mgr.save(i + 1, state)
-            sys.exit(143)
-    if mgr:
-        mgr.wait()
-        mgr.save(args.steps, state)
+    remaining = max(args.steps - sup.cursor, 0)
+    summary = sup.run(remaining, stop=lambda: stop["now"],
+                      log_every=args.log_every)
+    dt = time.perf_counter() - t0
+
+    if stop["now"] and not sup.halted:
+        print(f"preempted at cursor {sup.cursor}: final checkpoint written")
+
+    # --- per-run outcome table (mirrors launch/serve.py) --------------------
+    print(f"trained {summary['steps_committed']} steps in {dt:.1f}s "
+          f"({summary['attempts']} attempts)")
+    print(f"{'outcome':>12} {'count':>6}")
+    for o in StepOutcome:
+        print(f"{o.value:>12} {summary['outcomes'][o.value]:>6}")
+    if summary["final_loss"] is not None:
+        print(f"final loss: {summary['final_loss']:.4f}")
+    print("summary:", json.dumps(
+        {k: v for k, v in summary.items() if k != "outcomes"}, default=str))
+    if harness is not None:
+        print("faults:", json.dumps(harness.summary()["event_counts"]))
+        if args.fault_log:
+            with open(args.fault_log, "w") as f:
+                json.dump({"harness": harness.summary(),
+                           "run": summary}, f, indent=2, default=str)
+            print(f"fault log written to {args.fault_log}")
     if num_log is not None:
         from repro.obs import count_moves
         print(f"numerics: {len(num_log.records)} records, "
               f"{count_moves(num_log.records)} controller moves -> "
               f"{args.numerics_log}")
         num_log.close()
+    if sup.halted:
+        print(f"HALTED: diagnostic bundle at {bundle_dir}", file=sys.stderr)
+        return sys.exit(3)
+    if stop["now"]:
+        return sys.exit(143)
     print("done")
-    return state
+    return sup.state
 
 
 if __name__ == "__main__":

@@ -52,6 +52,10 @@ class NumericsLog:
             self._f.write(json.dumps(rec) + "\n")
             self._f.flush()
 
+    def tail(self, n: int = 50) -> List[dict]:
+        """Last ``n`` records (the diagnostic-bundle excerpt)."""
+        return self.records[-n:] if n else []
+
     def close(self) -> None:
         if self._f is not None:
             self._f.close()

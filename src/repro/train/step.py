@@ -81,6 +81,17 @@ def _map_with_group(fn, tree, exps: Dict[str, Array], prefix: str,
     return out, stats
 
 
+# Sentinel flag bits (metrics["flags"] in supervised mode).
+FLAG_LOSS_NONFINITE = 1
+FLAG_GRAD_NONFINITE = 2
+FLAG_RUNAWAY_OVF = 4
+
+
+def benign_injection() -> Dict[str, Array]:
+    """The no-fault injection input for a supervised step."""
+    return {"grad_nan": jnp.bool_(False), "loss_scale": jnp.float32(1.0)}
+
+
 def make_train_step(
     loss_fn: Callable,            # (params, batch, sinks, exps) -> (loss, stats)
     group_shapes: Dict[str, tuple],
@@ -91,6 +102,9 @@ def make_train_step(
     compute_dtype=jnp.float32,
     grad_transform: Optional[Callable] = None,   # e.g. DFXP compression
     numerics_tap: bool = False,
+    ef_transform: Optional[Callable] = None,     # (grads, ef) -> (grads, ef)
+    supervise: bool = False,
+    runaway_ovf: Optional[float] = None,
 ):
     """Build ``step(state, batch, rng) -> (state, metrics)``.
 
@@ -100,11 +114,39 @@ def make_train_step(
     decision was made from (captured BEFORE the post-apply reset).  The
     host feeds it to :func:`repro.obs.numerics.train_records` on the
     logging cadence; off (the default) the metrics pytree is unchanged.
+
+    ``ef_transform`` threads an error-feedback state (e.g. the residual
+    buffers of :func:`repro.dist.compress.compress_tree`) through the
+    step: it is applied to the mean gradients and its state rides the
+    signature — required so crash recovery can checkpoint the residuals
+    and resume bit-exactly.
+
+    ``supervise=True`` is the fault-tolerant variant used by
+    :class:`repro.train.resilience.TrainSupervisor`.  The signature
+    becomes ``step(state, batch, rng, ef, inj) -> (state, metrics, ef)``:
+
+    * ``inj`` is a device-side fault-injection input (see
+      :func:`benign_injection`): ``loss_scale`` multiplies the loss
+      inside the differentiated function (a LossSpike travels through
+      real gradients) and ``grad_nan`` poisons the mean gradients with
+      NaN — both reach the sentinels by the same path a genuine blowup
+      would, mirroring the serve engine's ``nan_mask``.
+    * ``metrics["flags"]`` is an int32 sentinel bitmask computed inside
+      the jit — :data:`FLAG_LOSS_NONFINITE` | :data:`FLAG_GRAD_NONFINITE`
+      | :data:`FLAG_RUNAWAY_OVF` (any tensor class whose §5 overflow
+      rate this step exceeds ``runaway_ovf``) — and
+      ``metrics["cls_rates"]`` carries the per-tensor-class rates.  One
+      extra scalar fetch per step, like serve's ``guard_logits``.
+    * On a tripped sentinel the state update is discarded *on device*
+      (branch-free select): params/opt/step/ef keep their old values.
+      The scale state is still adopted when only the runaway flag is set
+      — the §5 controller must see the overflow window to escape it —
+      but never on a NaN flag.
     """
     dyn = policy.dynamic
     quant_params = policy.enabled and policy.arithmetic in ("fixed", "dfxp")
 
-    def step(state: TrainState, batch, rng: Array):
+    def _impl(state: TrainState, batch, rng: Array, ef, inj):
         sinks = {n: jnp.zeros(s + (3,), jnp.float32)
                  for n, s in group_shapes.items() if n.startswith("g:")}
 
@@ -120,7 +162,11 @@ def make_train_step(
         exps = state.scale.exps
 
         def loss_wrap(p, s, b):
-            return loss_fn(p, b, s, exps)
+            loss, st = loss_fn(p, b, s, exps)
+            if inj is not None:
+                # LossSpike rides through AD: scaled loss => scaled grads
+                loss = loss * inj["loss_scale"]
+            return loss, st
 
         grad_fn = jax.value_and_grad(loss_wrap, argnums=(0, 1), has_aux=True)
 
@@ -166,8 +212,17 @@ def make_train_step(
             (loss, fwd_stats), (grads, sink_stats) = grad_fn(params_c, sinks,
                                                              batch)
 
+        if inj is not None:
+            poison = jnp.where(inj["grad_nan"], jnp.float32(jnp.nan),
+                               jnp.float32(0.0))
+            grads = jax.tree.map(lambda g: g + poison.astype(g.dtype), grads)
+
         if grad_transform is not None:
             grads = grad_transform(grads)
+
+        new_ef = ef
+        if ef_transform is not None:
+            grads, new_ef = ef_transform(grads, ef)
 
         # ---- gradient processing ------------------------------------------
         gnorm = global_norm(grads)
@@ -255,7 +310,61 @@ def make_train_step(
                 "exps": new_scale.exps,
                 "acc": acc_window if acc_window is not None else {},
             }
-        return TrainState(params=new_params, opt=new_opt, scale=new_scale,
-                          step=state.step + 1), metrics
+
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               scale=new_scale, step=state.step + 1)
+
+        if supervise:
+            from repro.core.tape import tensor_class
+            bad_loss = ~jnp.isfinite(loss)
+            bad_grad = ~jnp.isfinite(gnorm)
+            cls_ovf: Dict[str, Array] = {}
+            cls_tot: Dict[str, Array] = {}
+            for gname, st in all_stats.items():
+                c = tensor_class(gname)
+                cls_ovf[c] = cls_ovf.get(c, 0.0) + jnp.sum(st[..., 0])
+                cls_tot[c] = cls_tot.get(c, 0.0) + jnp.sum(st[..., 2])
+            cls_rates = {c: cls_ovf[c] / jnp.maximum(cls_tot[c], 1.0)
+                         for c in sorted(cls_ovf)}
+            runaway = jnp.bool_(False)
+            if runaway_ovf is not None and cls_rates:
+                runaway = (jnp.stack(list(cls_rates.values())).max()
+                           > runaway_ovf)
+            flags = (bad_loss.astype(jnp.int32) * FLAG_LOSS_NONFINITE
+                     + bad_grad.astype(jnp.int32) * FLAG_GRAD_NONFINITE
+                     + runaway.astype(jnp.int32) * FLAG_RUNAWAY_OVF)
+            metrics["flags"] = flags
+            metrics["cls_rates"] = cls_rates
+
+            # Discard a tripped step's update on device: SKIPPED costs no
+            # extra host round-trip before the next step can launch.
+            nan_bad = bad_loss | bad_grad
+            any_bad = nan_bad | runaway
+
+            def sel(pred, old, new):
+                return jax.tree.map(lambda a, b: jnp.where(pred, a, b),
+                                    old, new)
+
+            new_state = TrainState(
+                params=sel(any_bad, state.params, new_state.params),
+                opt=sel(any_bad, state.opt, new_state.opt),
+                # runaway-only: keep the new scale so the §5 controller
+                # can move the exponent out of the overflow regime
+                scale=sel(nan_bad, state.scale, new_state.scale),
+                step=jnp.where(any_bad, state.step, new_state.step))
+            new_ef = sel(any_bad, ef, new_ef)
+
+        return new_state, metrics, new_ef
+
+    if supervise:
+        def step(state: TrainState, batch, rng: Array, ef, inj):
+            return _impl(state, batch, rng, ef, inj)
+    elif ef_transform is not None:
+        def step(state: TrainState, batch, rng: Array, ef):
+            return _impl(state, batch, rng, ef, None)
+    else:
+        def step(state: TrainState, batch, rng: Array):
+            out_state, metrics, _ = _impl(state, batch, rng, {}, None)
+            return out_state, metrics
 
     return step

@@ -1,4 +1,5 @@
-"""Checkpoint manager: roundtrip, atomicity, retention, elastic reshard."""
+"""Checkpoint manager: roundtrip, atomicity, integrity, retention."""
+import json
 import os
 
 import jax
@@ -6,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              CheckpointWriteError, LeafCorruptError,
+                              LeafMismatchError, restore_tree, save_tree)
 from repro.core.packed import pack, unpack
 
 
@@ -70,3 +73,151 @@ def test_restore_missing_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         mgr.restore({"a": jnp.zeros(3)})
+
+
+# ----------------------------------------------------------- typed errors
+
+
+def _template(t):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                                       jnp.result_type(x)), t)
+
+
+def test_leaf_count_mismatch_names_counts(tmp_path):
+    t = _tree(jax.random.PRNGKey(5))
+    save_tree(t, str(tmp_path / "ck"))
+    with pytest.raises(LeafMismatchError, match="3 leaves"):
+        restore_tree({"a": jnp.zeros((16, 8))}, str(tmp_path / "ck"))
+
+
+def test_shape_and_dtype_mismatch_name_the_leaf(tmp_path):
+    t = _tree(jax.random.PRNGKey(6))
+    save_tree(t, str(tmp_path / "ck"))
+    bad_shape = dict(t, a=jnp.zeros((2, 2)))
+    with pytest.raises(LeafMismatchError, match="'a'.*shape"):
+        restore_tree(_template(bad_shape), str(tmp_path / "ck"))
+    bad_dtype = {"a": t["a"], "nested": dict(t["nested"],
+                                             step=jnp.float32(0))}
+    with pytest.raises(LeafMismatchError, match="'nested/step'.*dtype"):
+        restore_tree(_template(bad_dtype), str(tmp_path / "ck"))
+
+
+def _corrupt_one_leaf(ckpt_dir):
+    leaf = sorted(f for f in os.listdir(ckpt_dir)
+                  if f.endswith(".npy"))[0]
+    p = os.path.join(ckpt_dir, leaf)
+    with open(p, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return leaf
+
+
+def test_crc_corruption_is_a_typed_error_naming_the_leaf(tmp_path):
+    t = _tree(jax.random.PRNGKey(7))
+    save_tree(t, str(tmp_path / "ck"))
+    _corrupt_one_leaf(str(tmp_path / "ck"))
+    with pytest.raises(LeafCorruptError, match="CRC32"):
+        restore_tree(_template(t), str(tmp_path / "ck"))
+    with open(tmp_path / "ck" / "manifest.json") as f:
+        names = [leaf["name"] for leaf in json.load(f)["leaves"]]
+    with pytest.raises(LeafCorruptError, match=names[0].split("/")[-1]):
+        restore_tree(_template(t), str(tmp_path / "ck"))
+
+
+# ------------------------------------------------------ fallback on tears
+
+
+def test_crc_corrupted_newest_falls_back_to_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(jax.random.PRNGKey(8))
+    mgr.save(10, t)
+    mgr.save(20, jax.tree.map(lambda x: x + 1, t))
+    _corrupt_one_leaf(str(tmp_path / "step_00000020"))
+    tree, step = mgr.restore_latest(_template(t))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(t["a"]))
+    # the corrupt dir was quarantined, not retried
+    assert mgr.all_steps() == [10]
+    assert any(d.startswith("corrupt_") for d in os.listdir(tmp_path))
+
+
+def test_stripped_committed_falls_back_to_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(jax.random.PRNGKey(9))
+    mgr.save(10, t)
+    mgr.save(20, jax.tree.map(lambda x: x + 1, t))
+    os.remove(tmp_path / "step_00000020" / "_COMMITTED")
+    tree, step = mgr.restore_latest(_template(t))
+    assert step == 10
+
+
+def test_all_corrupt_raises_checkpoint_error(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(jax.random.PRNGKey(10))
+    mgr.save(10, t)
+    _corrupt_one_leaf(str(tmp_path / "step_00000010"))
+    with pytest.raises(CheckpointError, match="failed verification"):
+        mgr.restore_latest(_template(t))
+
+
+# --------------------------------------------------- async + retry + GC
+
+
+def test_async_error_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=0, backoff_s=0.0)
+    t = _tree(jax.random.PRNGKey(11))
+    mgr.inject_failure()
+    mgr.save_async(5, t)
+    with pytest.raises(CheckpointWriteError, match="injected"):
+        mgr.wait()
+    # the error is consumed: the next save goes through clean
+    mgr.save_async(6, t)
+    mgr.wait()
+    assert mgr.latest() == 6
+
+
+def test_async_error_surfaces_on_next_save_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=0, backoff_s=0.0)
+    t = _tree(jax.random.PRNGKey(12))
+    mgr.inject_failure()
+    mgr.save_async(5, t)
+    import time
+    time.sleep(0.2)
+    with pytest.raises(CheckpointWriteError):
+        mgr.save_async(6, t)
+
+
+def test_save_retry_survives_transient_failure(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=2, backoff_s=0.0)
+    t = _tree(jax.random.PRNGKey(13))
+    mgr.inject_failure(count=1)         # first attempt dies, retry wins
+    mgr.save(5, t)
+    assert mgr.latest() == 5
+    assert not os.path.exists(tmp_path / "step_00000005.tmp")
+
+
+def test_retention_never_deletes_newest_committed_mid_save(tmp_path):
+    """keep=1 with the successor's save dying mid-write: the newest
+    committed dir must survive as the restore anchor."""
+    mgr = CheckpointManager(str(tmp_path), keep=1, retries=0, backoff_s=0.0)
+    t = _tree(jax.random.PRNGKey(14))
+    mgr.save(10, t)
+    mgr.inject_failure()
+    with pytest.raises(CheckpointWriteError):
+        mgr.save(20, t)
+    assert mgr.latest() == 10           # anchor intact
+    tree, step = mgr.restore_latest(_template(t))
+    assert step == 10
+
+
+def test_weird_dir_names_do_not_crash_all_steps(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(jax.random.PRNGKey(15))
+    mgr.save(10, t)
+    # a torn dir with a non-integer suffix (e.g. interrupted tmp rename)
+    os.makedirs(tmp_path / "step_00000020.tmp")
+    open(tmp_path / "step_00000020.tmp" / "_COMMITTED", "w").close()
+    os.makedirs(tmp_path / "step_junk")
+    assert mgr.all_steps() == [10]
