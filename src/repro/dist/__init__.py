@@ -18,5 +18,11 @@ from repro import _jax_compat
 
 _jax_compat.install()
 
-from .context import DistCtx, multi_pod_ctx, single_pod_ctx  # noqa: E402,F401
+from .context import (  # noqa: E402,F401
+    DistCtx,
+    MeshConfigError,
+    multi_pod_ctx,
+    serve_pod_ctx,
+    single_pod_ctx,
+)
 from .sharding import ShardingRules  # noqa: E402,F401

@@ -27,6 +27,18 @@ import dataclasses
 from typing import Optional, Tuple
 
 
+class MeshConfigError(ValueError):
+    """An incoherent mesh/parallelism request, rejected at construction.
+
+    Raised by the serve-side factories (``serve_pod_ctx``,
+    ``launch.mesh.make_serve_mesh``, ``serve.kv_pool.make_kv_pool``,
+    ``ServeEngine``) for combinations that would otherwise surface as a
+    late, cryptic jit/GSPMD failure: a mesh larger than the visible
+    device count, CP over a paged arena, a KV window the CP degree does
+    not divide, a ``DistCtx`` naming axes the mesh doesn't have.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class DistCtx:
     token_axes: Tuple[str, ...] = ()
@@ -52,6 +64,26 @@ def single_pod_ctx() -> DistCtx:
     """16×16 single-pod mesh: ``data`` × ``model`` (see launch/mesh.py)."""
     return DistCtx(token_axes=("data",), ep_axis="model", fsdp_axis="data",
                    cp_axis="data", all_axes=("data", "model"))
+
+
+def serve_pod_ctx(*, tp: int = 1, cp: int = 1) -> DistCtx:
+    """Serving context for a ``make_serve_mesh(tp, cp)`` mesh.
+
+    Serving tensor-parallelism shards the **KV pool** over its kv-head
+    axis (``model``) — the HBM-bound tensor at production batch sizes —
+    while parameters stay replicated, so every contraction that could
+    reorder partial sums runs identically on every device and the
+    sharded engine's greedy streams stay bit-identical to single-device.
+    ``cp > 1`` shards the decode KV *window* over ``data`` instead
+    (long-context slots) and sets ``cp_decode`` so attention runs the
+    exact log-sum-exp merge of :mod:`repro.dist.cp_attention`.
+    """
+    if tp < 1 or cp < 1:
+        raise MeshConfigError(f"tp={tp} and cp={cp} must be >= 1")
+    axes = tuple(a for a, n in (("data", cp), ("model", tp)) if n > 1)
+    return DistCtx(ep_axis="model" if tp > 1 else None,
+                   cp_axis="data" if cp > 1 else None,
+                   all_axes=axes, cp_decode=cp > 1)
 
 
 def multi_pod_ctx() -> DistCtx:

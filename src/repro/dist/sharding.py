@@ -172,6 +172,65 @@ class ShardingRules:
             return self._named(ent, leaf.shape)
         return jax.tree_util.tree_map_with_path(spec, cache)
 
+    # -- serve KV pools -----------------------------------------------------
+    def pool_shardings(self, pool):
+        """NamedSharding tree for a serve KV pool (raw/slot-major/paged).
+
+        The pool is the serving engine's HBM-bound tensor; its layout is
+        derived here rather than assumed host-side, so the same engine
+        code runs single-device and sharded:
+
+        * K/V storage (``k``/``v`` raw, ``k_m``/``v_m`` mantissas) shards
+          the **kv-head** axis over ``tp`` — slot-major ``[L, B, W, K,
+          hd]`` and paged arenas ``[L, n_pages, P, K, hd]`` both carry it
+          at axis 3.  Per-head attention math never contracts across
+          heads, so a head-sharded pool is bit-exact;
+        * with ``seq_shard_cache`` (context parallelism), slot-major
+          storage and ``pos`` additionally shard the ring **window** axis
+          over ``cp`` — the layout
+          :func:`repro.dist.cp_attention.cp_decode_attention` merges
+          exactly.  Paged pools never CP-shard (pages already tile the
+          window; the combination is rejected upstream);
+        * exponents, §5 counters, block tables, and every non-attention
+          entry replicate — they are per-slot/per-page scalars the
+          controller must see whole.
+
+        The divisibility guard applies as everywhere else: an axis that
+        does not divide its dim (e.g. 4-way ``tp`` over 2 kv heads) is
+        dropped to replicated, and the fused kernels fall back to their
+        unsharded call on the same condition.
+        """
+        tp = self.tp if self.tp in self.mesh.shape else None
+        cp = self.cp if (self.seq_shard_cache
+                         and self.cp in self.mesh.shape) else None
+
+        def replicate(sub):
+            return jax.tree_util.tree_map(
+                lambda x: self._named((None,) * len(x.shape), x.shape), sub)
+
+        def entry_specs(entry):
+            paged = "bt" in entry
+            out = {}
+            for name, leaf in entry.items():
+                nd = len(leaf.shape)
+                if name in ("k", "v", "k_m", "v_m") and nd == 5:
+                    win = None if paged else cp
+                    ent: tuple = (None, None, win, tp, None)
+                elif not paged and name == "pos" and nd == 3:
+                    ent = (None, None, cp)
+                else:
+                    ent = (None,) * nd
+                out[name] = self._named(ent, leaf.shape)
+            return out
+
+        def is_attn(e):
+            return isinstance(e, dict) and "pos" in e and \
+                ("k" in e or "k_m" in e)
+
+        return {sname: {bkey: entry_specs(e) if is_attn(e) else replicate(e)
+                        for bkey, e in sc.items()}
+                for sname, sc in pool.items()}
+
     # -- introspection ------------------------------------------------------
     def describe(self, tree) -> Dict[str, str]:
         """Human-readable ``{path: spec}`` map (for dry-run reports/tests)."""

@@ -18,7 +18,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
+from repro._jax_compat import ambient_mesh
 from repro.core.quant import exact_pow2
 from repro.kernels import dispatch
 from repro.kernels._tiling import resolve_interpret
@@ -29,11 +31,29 @@ from .prefill_kernel import flash_prefill_call, flash_prefill_paged_call
 Array = jax.Array
 
 
+def _tp_size(tp_axis: Optional[str], n_kv_heads: int) -> int:
+    """Live TP degree for the fused kernels.
+
+    Returns the ambient-mesh size of ``tp_axis`` when the axis exists,
+    is larger than 1, and evenly divides the kv-head count; 0 otherwise
+    — the caller then runs the unsharded kernel (same numerics, pool
+    replicated by the sharding guard under the same condition).
+    """
+    if not tp_axis:
+        return 0
+    mesh = ambient_mesh()
+    if mesh is None or tp_axis not in mesh.shape:
+        return 0
+    size = int(mesh.shape[tp_axis])
+    return size if size > 1 and n_kv_heads % size == 0 else 0
+
+
 def flash_decode(q: Array, k: Array, v: Array, pos: Array, q_pos: Array,
                  k_exp=None, v_exp=None, *, width: Optional[int] = None,
                  scale: float, window: Optional[int] = None,
                  causal: bool = True, block_w: Optional[int] = None,
-                 interpret: Optional[bool] = None) -> Array:
+                 interpret: Optional[bool] = None,
+                 tp_axis: Optional[str] = None) -> Array:
     """Fused single-query GQA attention over a (packed) KV ring buffer.
 
     ``q``: [B, K, G, hd] (kv-head-major query groups, i.e.
@@ -44,8 +64,33 @@ def flash_decode(q: Array, k: Array, v: Array, pos: Array, q_pos: Array,
     entries.  Returns f32 [B, K, G, hd]; numerics are the
     :func:`repro.kernels.attn.ref.decode_attention_ref` composite
     (bit-identical in interpret mode).
+
+    With ``tp_axis`` naming a live ambient-mesh axis that divides ``K``,
+    the call shard_maps itself over the kv-head axis — each shard runs
+    this same function on its head slice, so per-head numerics are
+    untouched (GQA never contracts across kv heads).
     """
     B, K, G, hd = q.shape
+    tp = _tp_size(tp_axis, K)
+    if tp:
+        kw = dict(width=width, scale=scale, window=window, causal=causal,
+                  block_w=block_w, interpret=interpret)
+        h = PartitionSpec(None, tp_axis)
+        kv = PartitionSpec(None, None, tp_axis)
+        r = PartitionSpec()
+        if width is None:
+            return jax.shard_map(
+                lambda q, k, v, pos, qp: flash_decode(q, k, v, pos, qp,
+                                                      **kw),
+                in_specs=(h, kv, kv, r, r), out_specs=h,
+                check_vma=False)(q, k, v, pos, jnp.asarray(q_pos))
+        return jax.shard_map(
+            lambda q, k, v, pos, qp, ke, ve: flash_decode(
+                q, k, v, pos, qp, ke, ve, **kw),
+            in_specs=(h, kv, kv, r, r, r, r), out_specs=h,
+            check_vma=False)(q, k, v, pos, jnp.asarray(q_pos),
+                             jnp.asarray(k_exp, jnp.float32),
+                             jnp.asarray(v_exp, jnp.float32))
     W = k.shape[1]
     interpret = resolve_interpret(interpret)
     if block_w is None:
@@ -72,7 +117,8 @@ def flash_prefill(q: Array, k_new: Array, v_new: Array, k: Array, v: Array,
                   v_exp=None, *, width: Optional[int] = None, scale: float,
                   window: Optional[int] = None, causal: bool = True,
                   block_w: Optional[int] = None,
-                  interpret: Optional[bool] = None) -> Array:
+                  interpret: Optional[bool] = None,
+                  tp_axis: Optional[str] = None) -> Array:
     """Fused chunked-prefill GQA attention over a (packed) KV ring buffer.
 
     ``q``: [B, C, K, G, hd] kv-head-major query groups for a chunk of
@@ -84,8 +130,31 @@ def flash_prefill(q: Array, k_new: Array, v_new: Array, k: Array, v: Array,
     valid chunk rows (ragged final chunk).  Returns f32 [B, C, K, G, hd];
     numerics are :func:`repro.kernels.attn.ref.prefill_attention_ref`
     (bit-identical in interpret mode).
+
+    ``tp_axis`` shard_maps over the kv-head axis exactly as in
+    :func:`flash_decode`.
     """
     B, C, K, G, hd = q.shape
+    tp = _tp_size(tp_axis, K)
+    if tp:
+        kw = dict(width=width, scale=scale, window=window, causal=causal,
+                  block_w=block_w, interpret=interpret)
+        h = PartitionSpec(None, None, tp_axis)
+        r = PartitionSpec()
+        args = (q, k_new, v_new, k, v, pos, jnp.asarray(p0),
+                jnp.asarray(n_valid))
+        if width is None:
+            return jax.shard_map(
+                lambda q, kn, vn, k, v, pos, p0, nv: flash_prefill(
+                    q, kn, vn, k, v, pos, p0, nv, **kw),
+                in_specs=(h, h, h, h, h, r, r, r), out_specs=h,
+                check_vma=False)(*args)
+        return jax.shard_map(
+            lambda q, kn, vn, k, v, pos, p0, nv, ke, ve: flash_prefill(
+                q, kn, vn, k, v, pos, p0, nv, ke, ve, **kw),
+            in_specs=(h, h, h, h, h, r, r, r, r, r), out_specs=h,
+            check_vma=False)(*args, jnp.asarray(k_exp, jnp.float32),
+                             jnp.asarray(v_exp, jnp.float32))
     W = k.shape[1]
     interpret = resolve_interpret(interpret)
     if block_w is None:
@@ -124,7 +193,8 @@ def flash_decode_paged(q: Array, k: Array, v: Array, bt: Array, pos: Array,
                        width: Optional[int] = None, scale: float,
                        window: Optional[int] = None, causal: bool = True,
                        interpret: Optional[bool] = None,
-                       force_split: bool = False) -> Array:
+                       force_split: bool = False,
+                       tp_axis: Optional[str] = None) -> Array:
     """Fused single-query GQA attention through a per-request block table.
 
     ``q``: [B, K, G, hd] kv-head-major query groups · ``k``/``v``:
@@ -135,8 +205,32 @@ def flash_decode_paged(q: Array, k: Array, v: Array, bt: Array, pos: Array,
     [B, K, G, hd]; numerics are
     :func:`repro.kernels.attn.ref.paged_decode_attention_ref`
     (bit-identical in interpret mode).
+
+    ``tp_axis`` shard_maps over the kv-head axis (page arenas carry it at
+    axis 2) exactly as in :func:`flash_decode`; block tables, positions
+    and per-page exponents stay replicated.
     """
     B, K, G, hd = q.shape
+    tp = _tp_size(tp_axis, K)
+    if tp:
+        kw = dict(width=width, scale=scale, window=window, causal=causal,
+                  interpret=interpret, force_split=force_split)
+        h = PartitionSpec(None, tp_axis)
+        arena = PartitionSpec(None, None, tp_axis)
+        r = PartitionSpec()
+        args = (q, k, v, bt, pos, jnp.asarray(q_pos))
+        if width is None:
+            return jax.shard_map(
+                lambda q, k, v, bt, pos, qp: flash_decode_paged(
+                    q, k, v, bt, pos, qp, **kw),
+                in_specs=(h, arena, arena, r, r, r), out_specs=h,
+                check_vma=False)(*args)
+        return jax.shard_map(
+            lambda q, k, v, bt, pos, qp, ke, ve: flash_decode_paged(
+                q, k, v, bt, pos, qp, ke, ve, **kw),
+            in_specs=(h, arena, arena, r, r, r, r, r), out_specs=h,
+            check_vma=False)(*args, jnp.asarray(k_exp, jnp.float32),
+                             jnp.asarray(v_exp, jnp.float32))
     n_pages, P = k.shape[:2]
     interpret = resolve_interpret(interpret)
     dispatch.paged_attn_blocks_for(P, G, hd, width=width,
@@ -157,7 +251,8 @@ def flash_prefill_paged(q: Array, k_new: Array, v_new: Array, k: Array,
                         width: Optional[int] = None, scale: float,
                         window: Optional[int] = None, causal: bool = True,
                         interpret: Optional[bool] = None,
-                        force_split: bool = False) -> Array:
+                        force_split: bool = False,
+                        tp_axis: Optional[str] = None) -> Array:
     """Fused chunked-prefill GQA attention through a block table.
 
     ``q``: [B, C, K, G, hd] chunk query groups starting at ``p0`` [B] ·
@@ -168,8 +263,33 @@ def flash_prefill_paged(q: Array, k_new: Array, v_new: Array, k: Array,
     numerics are
     :func:`repro.kernels.attn.ref.paged_prefill_attention_ref`
     (bit-identical in interpret mode).
+
+    ``tp_axis`` shard_maps over the kv-head axis exactly as in
+    :func:`flash_decode_paged`.
     """
     B, C, K, G, hd = q.shape
+    tp = _tp_size(tp_axis, K)
+    if tp:
+        kw = dict(width=width, scale=scale, window=window, causal=causal,
+                  interpret=interpret, force_split=force_split)
+        h = PartitionSpec(None, None, tp_axis)
+        arena = PartitionSpec(None, None, tp_axis)
+        r = PartitionSpec()
+        args = (q, k_new, v_new, k, v, bt, pos, jnp.asarray(p0),
+                jnp.asarray(n_valid))
+        if width is None:
+            return jax.shard_map(
+                lambda q, kn, vn, k, v, bt, pos, p0, nv:
+                flash_prefill_paged(q, kn, vn, k, v, bt, pos, p0, nv, **kw),
+                in_specs=(h, h, h, arena, arena, r, r, r, r), out_specs=h,
+                check_vma=False)(*args)
+        return jax.shard_map(
+            lambda q, kn, vn, k, v, bt, pos, p0, nv, ke, ve:
+            flash_prefill_paged(q, kn, vn, k, v, bt, pos, p0, nv, ke, ve,
+                                **kw),
+            in_specs=(h, h, h, arena, arena, r, r, r, r, r, r), out_specs=h,
+            check_vma=False)(*args, jnp.asarray(k_exp, jnp.float32),
+                             jnp.asarray(v_exp, jnp.float32))
     n_pages, P = k.shape[:2]
     interpret = resolve_interpret(interpret)
     dispatch.paged_prefill_blocks_for(P, C, G, hd, width=width,

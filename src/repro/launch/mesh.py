@@ -19,6 +19,30 @@ def make_production_mesh(*, multi_pod: bool = False):
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
+def make_serve_mesh(*, tp: int = 1, cp: int = 1):
+    """``(cp, tp)`` serving mesh: ``data`` (CP window shards) × ``model``
+    (KV-head TP shards), matching :func:`repro.dist.serve_pod_ctx`.
+
+    Size-1 axes are kept (a 1×1 mesh is a valid single-device "sharded"
+    engine — the degenerate case the identity tests anchor on).  Raises
+    :class:`repro.dist.MeshConfigError` up front when the request
+    exceeds the visible device count, instead of a late
+    ``jax.make_mesh`` assertion mid-engine-construction.
+    """
+    from repro.dist import MeshConfigError
+
+    if tp < 1 or cp < 1:
+        raise MeshConfigError(f"tp={tp} and cp={cp} must be >= 1")
+    have = jax.device_count()
+    if tp * cp > have:
+        raise MeshConfigError(
+            f"serve mesh needs tp*cp = {tp * cp} devices but only {have} "
+            f"are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N for CPU testing)")
+    return jax.make_mesh((cp, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-device CPU tests (forced host device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"),

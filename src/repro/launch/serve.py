@@ -36,8 +36,16 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import ScaleState
 from repro.core.policy import PrecisionPolicy
+from repro.dist import MeshConfigError, serve_pod_ctx
+from repro.launch.mesh import make_serve_mesh
 from repro.models import transformer as T
-from repro.serve import FaultHarness, SamplerConfig, ServeEngine, chaos_plan
+from repro.serve import (
+    EngineOptions,
+    FaultHarness,
+    SamplerConfig,
+    ServeEngine,
+    chaos_plan,
+)
 
 
 class Engine:
@@ -118,6 +126,21 @@ def main(argv=None):
                          "the same pages (refcounted, copy-on-write on "
                          "divergence). Implies --prefill-chunk P unless "
                          "set. Dense global-attention archs only")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh as DATAxMODEL (e.g. 2x1, 1x4): the "
+                         "data axis shards the decode KV window (context "
+                         "parallelism), the model axis shards the pool's "
+                         "kv heads (tensor parallelism). Mutually "
+                         "exclusive with --tp/--cp")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="serving tensor parallelism: shard the KV pool's "
+                         "kv-head axis over N devices (params replicated; "
+                         "greedy streams bit-identical to single-device)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="serving context parallelism: shard the decode KV "
+                         "window over N devices (long-context slots; exact "
+                         "log-sum-exp merge). Slot-major pools only — "
+                         "incompatible with --page-size")
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -187,6 +210,30 @@ def main(argv=None):
         if args.page_size == 0:
             args.page_size = 4
 
+    # mesh resolution: reject incoherent combinations here, as typed
+    # MeshConfigErrors, instead of letting them surface as late jit or
+    # GSPMD failures mid-serve
+    tp, cp = args.tp, args.cp
+    if args.mesh:
+        if tp != 1 or cp != 1:
+            raise MeshConfigError("--mesh and --tp/--cp are mutually "
+                                  "exclusive; pick one spelling")
+        try:
+            cp, tp = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise MeshConfigError(
+                f"--mesh {args.mesh!r} is not DATAxMODEL (e.g. 2x1, 1x4)")
+    if cp > 1 and args.page_size:
+        raise MeshConfigError(
+            "--cp cannot shard a paged arena (--page-size): pages tile "
+            "the window axis CP would shard — drop one of the two")
+    dist = mesh = None
+    if tp > 1 or cp > 1:
+        dist = serve_pod_ctx(tp=tp, cp=cp)
+        mesh = make_serve_mesh(tp=tp, cp=cp)   # raises if devices < tp*cp
+        print(f"mesh: data={cp} (cp) x model={tp} (tp) over "
+              f"{jax.device_count()} devices")
+
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     policy = PrecisionPolicy(args.arithmetic, fused_decode=args.fused_decode,
                              prefill_chunk=args.prefill_chunk,
@@ -229,16 +276,20 @@ def main(argv=None):
                        n_steps=4 * args.max_new,
                        squeeze_pages=4 if args.page_size else 0),
             seed=args.chaos)
+    opts = EngineOptions(cache_bits=args.cache_bits, sampler_cfg=scfg,
+                         cache_cfg=cache_cfg, n_pages=n_pages,
+                         seed=args.seed,
+                         queue_cap=args.queue_cap or None,
+                         deadline_ms=args.deadline_ms or None,
+                         faults=harness,
+                         tracer=tracer, numerics_log=num_log,
+                         numerics_every=args.numerics_every or None)
+    max_len = max(lens) + args.max_new
+    if cp > 1 and max_len % cp:
+        max_len += cp - max_len % cp   # the KV window shards evenly
     eng = ServeEngine(cfg, policy, params, max_slots=slots,
-                      max_len=max(lens) + args.max_new,
-                      cache_bits=args.cache_bits, sampler_cfg=scfg,
-                      cache_cfg=cache_cfg, n_pages=n_pages,
-                      seed=args.seed,
-                      queue_cap=args.queue_cap or None,
-                      deadline_ms=args.deadline_ms or None,
-                      faults=harness,
-                      tracer=tracer, numerics_log=num_log,
-                      numerics_every=args.numerics_every or None)
+                      max_len=max_len, options=opts,
+                      dist=dist, mesh=mesh)
     server = None
     if args.metrics_port is not None:
         from repro.obs import start_http_server

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -270,10 +271,31 @@ class RawKVCodec:
     (for this codec that is plain f32; for the packed codec, int
     mantissas dequantized in the tile loads). The default instance keeps
     it off, so every existing call site retains today's exact path.
+
+    The flag is now a **read-only property** owned by
+    :func:`repro.serve.kv_pool.make_kv_pool` (the factory decides the
+    decode path together with the pool layout); passing the legacy
+    ``fused_decode=`` constructor argument still works for one release
+    but warns.  ``tp_axis`` names the mesh axis the pool's kv-head
+    dimension is sharded over (serving tensor parallelism) — the fused
+    kernels shard_map themselves over it.
     """
 
-    def __init__(self, fused_decode: bool = False):
-        self.fused_decode = fused_decode
+    def __init__(self, fused_decode: Optional[bool] = None, *,
+                 tp_axis: Optional[str] = None):
+        if fused_decode is not None:
+            warnings.warn(
+                "RawKVCodec(fused_decode=...) is deprecated; build pools "
+                "through repro.serve.kv_pool.make_kv_pool, which owns the "
+                "decode-path choice", DeprecationWarning, stacklevel=2)
+        self._fused_decode = bool(fused_decode)
+        self.tp_axis = tp_axis
+
+    @property
+    def fused_decode(self) -> bool:
+        """Whether decode/prefill attention runs the fused Pallas kernels
+        on this codec's containers (set by the pool factory)."""
+        return self._fused_decode
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
                pos: Array, mask: Optional[Array] = None) -> dict:
@@ -337,7 +359,7 @@ class RawKVCodec:
         from repro.kernels.attn.ops import flash_decode
         return flash_decode(qg, entry["k"], entry["v"], entry["pos"], q_pos,
                             width=None, scale=scale, window=window,
-                            causal=causal)
+                            causal=causal, tp_axis=self.tp_axis)
 
     def fused_prefill(self, entry: dict, qg: Array, k_new: Array,
                       v_new: Array, p0: Array, n_valid: Array, *,
@@ -351,16 +373,40 @@ class RawKVCodec:
         from repro.kernels.attn.ops import flash_prefill
         return flash_prefill(qg, k_new, v_new, entry["k"], entry["v"],
                              entry["pos"], p0, n_valid, width=None,
-                             scale=scale, window=window, causal=causal)
+                             scale=scale, window=window, causal=causal,
+                             tp_axis=self.tp_axis)
 
 
 RAW_KV_CODEC = RawKVCodec()
 
 
+def _replicate_attn_out(o: Array, dist) -> Array:
+    """Force the attention output replicated before the ``wo`` contraction.
+
+    Under serving tensor parallelism the KV pool — and hence the per-head
+    attention output — is sharded over kv heads, while ``wo`` contracts
+    over the *full* head dimension.  Left to GSPMD that contraction runs
+    as sharded partial sums + psum, whose float addition order differs
+    from the single-device dot.  An explicit all-gather here keeps the
+    contraction replicated, which is what makes the sharded engine's
+    logits bit-identical to the unsharded run (per-head attention math is
+    shard-local and exact; this is the only cross-head reduction).
+    """
+    if dist is None or not getattr(dist, "active", False):
+        return o
+    from repro._jax_compat import ambient_mesh
+    mesh = ambient_mesh()
+    if mesh is None:
+        return o
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        o, NamedSharding(mesh, PartitionSpec()))
+
+
 def attention_prefill_chunk(params, spec: AttnSpec, x: Array,
                             positions: Array, cache: dict, tape: QTape,
                             prefix: str, *, n_valid: Array, window=None,
-                            codec=None):
+                            dist=None, codec=None):
     """One chunked-prefill step: ``C`` prompt positions against the pool.
 
     ``x``: [B, C, D] chunk activations at absolute positions ``positions``
@@ -402,6 +448,7 @@ def attention_prefill_chunk(params, spec: AttnSpec, x: Array,
                             n_valid, scale=scale, window=window,
                             causal=spec.causal)
     cache = codec.append_chunk(cache, kf, vf, p0, n_valid)
+    o = _replicate_attn_out(o, dist)
     o = o.reshape(B, C, spec.q_dim).astype(x.dtype)
     y = tape.dot(f"{prefix}/wo", o, params["wo"])
     return tape.act(f"{prefix}/out", y), cache
@@ -481,6 +528,7 @@ def attention_decode(params, spec: AttnSpec, x: Array, pos: Array,
         o = jnp.einsum("bkgqs,bskh->bqkgh", p, cache_v.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
         o = o.reshape(B, 1, spec.q_dim).astype(x.dtype)
+    o = _replicate_attn_out(o, dist)
     y = tape.dot(f"{prefix}/wo", o, params["wo"])
     return tape.act(f"{prefix}/out", y), cache
 

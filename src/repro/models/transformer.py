@@ -356,7 +356,7 @@ def _apply_block(cfg: ModelConfig, blk: SubBlock, pfx: str, bp, x, positions,
         elif mode == "chunk":
             y, cache_out = L.attention_prefill_chunk(
                 bp, spec, h, positions, cache_in, tape, pfx,
-                n_valid=n_valid, window=window, codec=kv_codec)
+                n_valid=n_valid, window=window, dist=dist, codec=kv_codec)
         else:  # decode
             if blk.kind == "xattn":
                 y = _xattn_decode(bp, spec, h, cache_in, tape, pfx)

@@ -1,5 +1,10 @@
 """repro.serve — continuous batching over a DFXP-packed KV-cache pool."""
-from .engine import Request, RequestStatus, ServeEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    EngineOptions,
+    Request,
+    RequestStatus,
+    ServeEngine,
+)
 from .faults import (  # noqa: F401
     AdmitDelay,
     FaultHarness,
@@ -10,8 +15,10 @@ from .faults import (  # noqa: F401
 )
 from .kv_pool import (  # noqa: F401
     CacheQuantConfig,
+    KVPool,
     PackedKVCodec,
     insert,
+    make_kv_pool,
     make_pool,
     numerics_snapshot,
     overflow_summary,

@@ -88,6 +88,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -96,7 +97,7 @@ import numpy as np
 
 from repro.core import ScaleState
 from repro.core.policy import PrecisionPolicy
-from repro.models import layers as L
+from repro.dist import DistCtx, MeshConfigError, serve_pod_ctx
 from repro.models import transformer as T
 
 from . import kv_pool, metrics, paged, sampler
@@ -135,8 +136,64 @@ class Request:
     n_preempt: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Every :class:`ServeEngine` knob beyond the model triple, the slot
+    geometry, and the mesh, as one typed value.
+
+    Groups the pool layout (``cache_bits``/``cache_cfg``/``page_size``/
+    ``n_pages``/``prefill_chunk``), sampling (``sampler_cfg``/``seed``),
+    admission control (``queue_cap``/``deadline_ms``), resilience
+    (``runaway_ovf``/``max_preempts``/``faults``), and observability
+    (``tracer``/``numerics_log``/``numerics_every``) knobs that used to
+    travel as loose keyword arguments.  Field semantics are documented on
+    :class:`ServeEngine` (they are the same knobs, one release of
+    deprecation apart); defaults reproduce the bare
+    ``ServeEngine(cfg, policy, params, max_slots=…, max_len=…)`` engine
+    bit-for-bit.
+    """
+
+    cache_bits: int = 0
+    sampler_cfg: sampler.SamplerConfig = sampler.SamplerConfig()
+    cache_cfg: Optional[kv_pool.CacheQuantConfig] = None
+    seed: int = 0
+    init_exp: float = -6.0
+    prefill_chunk: Optional[int] = None
+    page_size: Optional[int] = None
+    n_pages: Optional[int] = None
+    queue_cap: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    runaway_ovf: Optional[float] = None
+    max_preempts: int = 4
+    faults: object = None
+    tracer: object = None
+    numerics_log: object = None
+    numerics_every: Optional[int] = None
+
+
+_LEGACY_ENGINE_KWARGS = frozenset(
+    f.name for f in dataclasses.fields(EngineOptions))
+
+
 class ServeEngine:
     """Continuous-batching engine over ``max_slots`` concurrent sequences.
+
+    Construction is ``ServeEngine(cfg, policy, params, max_slots=…,
+    max_len=…, options=EngineOptions(…))`` plus, for multi-device
+    serving, ``dist=serve_pod_ctx(tp=…, cp=…)`` and
+    ``mesh=make_serve_mesh(tp=…, cp=…)``.  Passing the options fields as
+    loose keyword arguments still works for one release and warns
+    (``DeprecationWarning``); unknown keywords raise ``TypeError``.
+
+    Multi-device serving shards the **KV pool** (the HBM-bound tensor):
+    kv heads over the mesh's ``model`` axis (TP), and — with
+    ``dist.cp_decode`` — the decode KV window over ``data`` (CP, exact
+    log-sum-exp merge).  Parameters stay replicated and the attention
+    output is gathered before the ``wo`` contraction, so the sharded
+    engine's greedy token streams are bit-identical to single-device.
+    Incoherent requests (active ``dist`` without its mesh, CP over a
+    paged arena, a window CP doesn't divide) raise
+    :class:`repro.dist.MeshConfigError` at construction.
 
     Parameters
     ----------
@@ -144,6 +201,13 @@ class ServeEngine:
     max_slots: concurrent sequences (the decode batch shape).
     max_len: per-slot KV capacity; every request needs
         ``prompt_len + max_new <= max_len``.
+    options: an :class:`EngineOptions`; the per-knob semantics below.
+    dist: a :class:`repro.dist.DistCtx` naming the mesh axes in play
+        (``serve_pod_ctx``); ``None`` with a ``mesh`` derives one from
+        the mesh's axis sizes; both ``None`` = single-device (today's
+        engine, bit-for-bit).
+    mesh: the device mesh (``launch.mesh.make_serve_mesh``) backing an
+        active ``dist``.
     cache_bits: 0 → float32 KV pool (bit-identical to the lockstep
         engine); 8/16 → DFXP-packed mantissa pool.  With
         ``policy.fused_decode`` the decode attention runs as the fused
@@ -210,82 +274,77 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: T.ModelConfig, policy: PrecisionPolicy, params,
-                 *, max_slots: int, max_len: int, cache_bits: int = 0,
-                 sampler_cfg: sampler.SamplerConfig = sampler.SamplerConfig(),
-                 cache_cfg: Optional[kv_pool.CacheQuantConfig] = None,
-                 seed: int = 0, init_exp: float = -6.0,
-                 prefill_chunk: Optional[int] = None,
-                 page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None,
-                 queue_cap: Optional[int] = None,
-                 deadline_ms: Optional[float] = None,
-                 runaway_ovf: Optional[float] = None,
-                 max_preempts: int = 4,
-                 faults=None,
-                 tracer=None,
-                 numerics_log=None,
-                 numerics_every: Optional[int] = None):
+                 *, max_slots: int, max_len: int,
+                 options: Optional[EngineOptions] = None,
+                 dist: Optional[DistCtx] = None, mesh=None, **legacy):
+        if legacy:
+            unknown = sorted(set(legacy) - _LEGACY_ENGINE_KWARGS)
+            if unknown:
+                raise TypeError(
+                    f"ServeEngine got unexpected keyword arguments "
+                    f"{unknown}")
+            warnings.warn(
+                "passing ServeEngine configuration as loose keyword "
+                "arguments is deprecated; pass options=EngineOptions(...)",
+                DeprecationWarning, stacklevel=2)
+            options = dataclasses.replace(options or EngineOptions(),
+                                          **legacy)
+        opts = options or EngineOptions()
         if cfg.input_mode != "tokens" or cfg.encoder_layers:
             raise ValueError("ServeEngine serves token-in decoder models")
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if dist is None and mesh is not None:
+            # derive the serving context from the mesh's axis sizes
+            dist = serve_pod_ctx(tp=int(mesh.shape.get("model", 1)),
+                                 cp=int(mesh.shape.get("data", 1)))
+        self.dist = dist or DistCtx()
+        self.mesh = mesh
+        if self.dist.active and mesh is None:
+            raise MeshConfigError(
+                "an active DistCtx needs the mesh it names; pass "
+                "mesh=launch.mesh.make_serve_mesh(...)")
         self.cfg, self.policy, self.params = cfg, policy, params
         self.max_slots, self.max_len = max_slots, max_len
-        self.sampler_cfg = sampler_cfg
-        self.seed = seed
-        self.queue_cap = queue_cap
-        self.deadline_ms = deadline_ms
-        self.runaway_ovf = runaway_ovf
-        self.max_preempts = max_preempts
-        self._faults = faults
+        self.options = opts
+        self.sampler_cfg = opts.sampler_cfg
+        self.seed = opts.seed
+        self.queue_cap = opts.queue_cap
+        self.deadline_ms = opts.deadline_ms
+        self.runaway_ovf = opts.runaway_ovf
+        self.max_preempts = opts.max_preempts
+        self._faults = opts.faults
         gs = T.group_shapes(cfg)
-        self.exps = ScaleState.create(gs, init_exp).exps
+        self.exps = ScaleState.create(gs, opts.init_exp).exps
         self.sinks = {n: jnp.zeros(s + (3,), jnp.float32)
                       for n, s in gs.items() if n.startswith("g:")}
 
-        fused = bool(getattr(policy, "fused_decode", False))
-        psize = page_size if page_size is not None else \
-            int(getattr(policy, "page_size", 0))
-        self.page_size = int(psize) if psize else 0
-        self._paged = bool(self.page_size)
-        if cache_bits:
-            self.cache_cfg = cache_cfg or kv_pool.CacheQuantConfig(
-                width=cache_bits)
-            if self.cache_cfg.width != cache_bits:
-                raise ValueError("cache_bits and cache_cfg.width disagree")
-            if self._paged:
-                self.codec = paged.PagedKVCodec(self.page_size,
-                                                self.cache_cfg,
-                                                fused_decode=fused)
-            else:
-                self.codec = kv_pool.PackedKVCodec(self.cache_cfg,
-                                                   fused_decode=fused)
-        else:
-            # f32 pool; with --fused-decode the raw codec still routes
-            # attention through the flash-decode kernel (width=None)
-            self.cache_cfg = None
-            if self._paged:
-                # paged f32 still needs the paged codec: attention must
-                # gather history through the block table either way
-                self.codec = paged.PagedKVCodec(self.page_size, None,
-                                                fused_decode=fused)
-            else:
-                self.codec = L.RawKVCodec(fused_decode=True) if fused \
-                    else None
-        self._packed = bool(cache_bits)
+        # pool construction is factory-owned: layout choice, codec
+        # capabilities, validation, and (mesh runs) sharded placement
+        kvp = kv_pool.make_kv_pool(
+            cfg, policy, self.dist, max_slots=max_slots, max_len=max_len,
+            cache_bits=opts.cache_bits, cache_cfg=opts.cache_cfg,
+            page_size=opts.page_size, n_pages=opts.n_pages, mesh=mesh)
+        self.kv = kvp
+        self.codec = kvp.codec
+        self.cache_cfg = kvp.cache_cfg
+        self.page_size = kvp.page_size
+        self._paged = kvp.paged
+        self._packed = kvp.packed
+        self._pool = kvp.pool
+        self._pool_shardings = kvp.shardings
+        if self.dist.active:
+            # params/exps/sinks stay REPLICATED: every contraction that
+            # could reorder partial sums runs identically on all devices,
+            # which is what keeps sharded greedy streams bit-identical
+            rep = jax.sharding.NamedSharding(mesh,
+                                             jax.sharding.PartitionSpec())
+            self.params = jax.device_put(self.params, rep)
+            self.exps = jax.device_put(self.exps, rep)
+            self.sinks = jax.device_put(self.sinks, rep)
         if self._paged:
-            if (cfg.family != "dense" or cfg.num_experts
-                    or cfg.encoder_layers):
-                raise ValueError(
-                    "paged KV pool requires the dense attention family "
-                    "(chunked prefill writes pages incrementally)")
-            self._pool = paged.make_paged_pool(cfg, max_slots, max_len,
-                                               self.codec, n_pages=n_pages)
-            nblocks = -(-max_len // self.page_size)
-            total_pages = n_pages if n_pages is not None else \
-                1 + max_slots * nblocks
-            self._alloc = paged.PageAllocator(total_pages, self.page_size,
-                                              nblocks)
+            self._alloc = paged.PageAllocator(kvp.total_pages,
+                                              self.page_size, kvp.nblocks)
             # a shared page cannot replay two requests' stochastic PRNG
             # chains — sharing off, COW/paging still on
             self._share_prefix = not (self._packed
@@ -294,10 +353,6 @@ class ServeEngine:
                                        donate_argnums=(0,))
             self._cow = jax.jit(paged.cow_page, donate_argnums=(0,))
             self._set_block = jax.jit(paged.set_block, donate_argnums=(0,))
-        else:
-            self._pool = kv_pool.make_pool(
-                cfg, max_slots, max_len,
-                self.codec if self._packed else None)
 
         # per-slot host state
         B = max_slots
@@ -322,16 +377,18 @@ class ServeEngine:
         # observability (every hook below guards on `is not None`; with
         # all three unset the step loop is bit-identical to an unobserved
         # engine — no spans, no samples, no extra syncs)
+        tracer = opts.tracer
+        numerics_log = opts.numerics_log
         self._tracer = tracer
-        if tracer is not None and faults is not None and \
-                getattr(faults, "tracer", None) is None:
-            faults.tracer = tracer    # fault injections land on the trace
+        if tracer is not None and self._faults is not None and \
+                getattr(self._faults, "tracer", None) is None:
+            self._faults.tracer = tracer  # fault injections land on trace
         if isinstance(numerics_log, str):
             from repro.obs import NumericsLog
             numerics_log = NumericsLog(numerics_log)
         self._numerics = numerics_log if self._packed else None
-        if numerics_every is not None:
-            self._num_every = max(int(numerics_every), 1)
+        if opts.numerics_every is not None:
+            self._num_every = max(int(opts.numerics_every), 1)
         elif self._packed:
             self._num_every = max(int(self.cache_cfg.update_interval), 1)
         else:
@@ -341,7 +398,7 @@ class ServeEngine:
 
         # chunked prefill: attention-family only (MoE capacity and SSM
         # state couple a whole prompt; they keep the whole-prompt path)
-        pc = prefill_chunk if prefill_chunk is not None else \
+        pc = opts.prefill_chunk if opts.prefill_chunk is not None else \
             int(getattr(policy, "prefill_chunk", 0))
         if self._paged and not pc:
             pc = self.page_size   # paged mode always prefills in chunks
@@ -374,10 +431,21 @@ class ServeEngine:
         self._admit_group_cap = 1 if cfg.num_experts else max_slots
 
     # -- jitted device steps ----------------------------------------------
+    def _constrain_pool(self, pool):
+        """Pin the donated pool to its canonical sharded layout.
+
+        Applied at every jit's pool output on mesh runs, so GSPMD cannot
+        drift the resident layout between steps; identity single-device.
+        """
+        if self._pool_shardings is None:
+            return pool
+        return jax.lax.with_sharding_constraint(pool, self._pool_shardings)
+
     def _prefill_impl(self, tokens, keys):
         logits, _, cache = T.prefill(self.cfg, self.policy, self.params,
                                      {"tokens": tokens}, self.exps,
-                                     self.sinks, max_cache_len=self.max_len)
+                                     self.sinks, self.dist,
+                                     max_cache_len=self.max_len)
         # first generated token sits at absolute position L = prompt length
         pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
         safe, bad = sampler.guard_logits(logits)
@@ -386,7 +454,8 @@ class ServeEngine:
         return first, bad, cache
 
     def _insert_impl(self, pool, entry, slots, keys):
-        return kv_pool.insert(pool, entry, slots, self.codec, keys)
+        return self._constrain_pool(
+            kv_pool.insert(pool, entry, slots, self.codec, keys))
 
     def _sample_guarded(self, logits, pos, keys, nan_mask):
         """Shared decode tail: fault mask → sentinel → sample."""
@@ -399,10 +468,11 @@ class ServeEngine:
     def _decode_impl(self, pool, tok, pos, keys, nan_mask):
         logits, _, pool = T.decode_step(self.cfg, self.policy, self.params,
                                         pool, tok, pos, self.exps,
-                                        self.sinks, kv_codec=self.codec)
+                                        self.sinks, self.dist,
+                                        kv_codec=self.codec)
         nxt, bad = self._sample_guarded(logits, pos, keys, nan_mask)
         rate = kv_pool.slot_overflow_rates(pool, self.max_slots)
-        return nxt, bad, rate, pool
+        return nxt, bad, rate, self._constrain_pool(pool)
 
     def _decode_masked_impl(self, pool, tok, pos, keys, mask, nan_mask):
         # chunked mode: slots mid-prefill (or free) decode garbage whose
@@ -410,11 +480,12 @@ class ServeEngine:
         # state must stay byte-identical to a solo run
         logits, _, pool = T.decode_step(self.cfg, self.policy, self.params,
                                         pool, tok, pos, self.exps,
-                                        self.sinks, kv_codec=self.codec,
+                                        self.sinks, self.dist,
+                                        kv_codec=self.codec,
                                         append_mask=mask)
         nxt, bad = self._sample_guarded(logits, pos, keys, nan_mask)
         rate = kv_pool.slot_overflow_rates(pool, self.max_slots)
-        return nxt, bad, rate, pool
+        return nxt, bad, rate, self._constrain_pool(pool)
 
     def _chunk_impl(self, pool, tokens, slot, p0, n_valid, keys):
         """One prefill chunk for one slot. ``tokens``: [1, C] (padded);
@@ -425,8 +496,9 @@ class ServeEngine:
         sub = paged.slice_slot(pool, slot)
         logits, _, sub = T.prefill_chunk_step(
             self.cfg, self.policy, self.params, sub, tokens, p0[None],
-            n_valid[None], self.exps, self.sinks, kv_codec=self.codec)
-        pool = paged.merge_slot(pool, sub, slot)
+            n_valid[None], self.exps, self.sinks, self.dist,
+            kv_codec=self.codec)
+        pool = self._constrain_pool(paged.merge_slot(pool, sub, slot))
         # the first generated token sits at absolute position p0 + n_valid
         # (== prompt length when this is the final chunk) — the same key
         # fold as whole-prompt _prefill_impl
@@ -791,6 +863,15 @@ class ServeEngine:
     def step(self) -> None:
         """Admit what fits, run one prefill chunk (chunked mode), then
         decode one token on every active slot."""
+        if self.mesh is not None:
+            # mesh runs trace their jits under the ambient mesh: the
+            # fused kernels' shard_map, the CP merge, and the attention
+            # output gather all resolve axis names against it
+            with jax.set_mesh(self.mesh):
+                return self._step_body()
+        return self._step_body()
+
+    def _step_body(self) -> None:
         self._step_idx += 1
         tr = self._tracer
         if self._faults is not None:

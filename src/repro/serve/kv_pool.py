@@ -119,13 +119,33 @@ class PackedKVCodec:
         key      : uint32 [n, B, 2]              (stochastic mode only)
     """
 
-    def __init__(self, config: CacheQuantConfig, fused_decode: bool = False):
+    def __init__(self, config: CacheQuantConfig,
+                 fused_decode: Optional[bool] = None, *,
+                 tp_axis: Optional[str] = None):
         self.cfg = config
         # capability flag attention_decode keys on: with it set, decode
         # attention runs the fused Pallas flash-decode kernel on the int
         # mantissas (dequant in the tile loads) and ``load`` — the f32
-        # K/V materialization below — never executes on the hot path
-        self.fused_decode = fused_decode
+        # K/V materialization below — never executes on the hot path.
+        # The flag is read-only and owned by :func:`make_kv_pool`; the
+        # legacy ``fused_decode=`` ctor arg warns for one release.
+        if fused_decode is not None:
+            import warnings
+            warnings.warn(
+                "PackedKVCodec(fused_decode=...) is deprecated; build "
+                "pools through repro.serve.kv_pool.make_kv_pool, which "
+                "owns the decode-path choice", DeprecationWarning,
+                stacklevel=2)
+        self._fused_decode = bool(fused_decode)
+        # serving-TP axis the pool's kv-head dim is sharded over; the
+        # fused kernels shard_map themselves over it (see kernels/attn/ops)
+        self.tp_axis = tp_axis
+
+    @property
+    def fused_decode(self) -> bool:
+        """Whether decode/prefill attention runs the fused Pallas kernels
+        on the packed mantissas (set by the pool factory)."""
+        return self._fused_decode
 
     # -- model-layer protocol (called per layer inside lax.scan) ----------
     def load(self, entry: dict):
@@ -147,7 +167,7 @@ class PackedKVCodec:
         return flash_decode(qg, entry["k_m"], entry["v_m"], entry["pos"],
                             q_pos, entry["k_e"], entry["v_e"],
                             width=self.cfg.width, scale=scale, window=window,
-                            causal=causal)
+                            causal=causal, tp_axis=self.tp_axis)
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
                pos: Array, mask: Optional[Array] = None) -> dict:
@@ -315,7 +335,8 @@ class PackedKVCodec:
         return flash_prefill(qg, k_new, v_new, entry["k_m"], entry["v_m"],
                              entry["pos"], p0, n_valid, entry["k_e"],
                              entry["v_e"], width=self.cfg.width, scale=scale,
-                             window=window, causal=causal)
+                             window=window, causal=causal,
+                             tp_axis=self.tp_axis)
 
     # -- pool management (full [n, B, ...] shapes, outside the scan) ------
     def init_like(self, raw: dict) -> dict:
@@ -392,6 +413,141 @@ def make_pool(cfg: T.ModelConfig, max_slots: int, max_len: int,
     return {sname: {bkey: codec.init_like(e) if is_attn_entry(e) else e
                     for bkey, e in sc.items()}
             for sname, sc in raw.items()}
+
+
+@dataclasses.dataclass
+class KVPool:
+    """A constructed serve KV pool: device pytree + codec + layout facts.
+
+    What :func:`make_kv_pool` returns — the engine consumes it wholesale
+    instead of re-deriving the raw/slot-major/paged branching inline.
+
+    ``codec`` is ``None`` for the plain f32 ring pool (the model layer
+    falls back to ``RAW_KV_CODEC``), else the codec whose ``init_like``
+    produced ``pool``.  ``shardings`` is the ``NamedSharding`` tree the
+    pool was placed with (mesh runs only); the engine re-constrains the
+    donated pool to it after every jit so GSPMD cannot drift the layout.
+    """
+
+    pool: dict
+    codec: object
+    cache_cfg: Optional[CacheQuantConfig]
+    page_size: int                    # 0 = slot-major
+    total_pages: int                  # incl. the null page; 0 if slot-major
+    nblocks: int                      # block-table width; 0 if slot-major
+    shardings: Optional[dict] = None
+
+    @property
+    def packed(self) -> bool:
+        return self.cache_cfg is not None
+
+    @property
+    def paged(self) -> bool:
+        return bool(self.page_size)
+
+
+def make_kv_pool(cfg: T.ModelConfig, policy, dist=None, *, max_slots: int,
+                 max_len: int, cache_bits: int = 0,
+                 cache_cfg: Optional[CacheQuantConfig] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None, mesh=None,
+                 fused_decode: Optional[bool] = None) -> KVPool:
+    """Build the serve KV pool — the one place that owns the layout choice.
+
+    Resolves the raw / slot-major-packed / paged decision (``cache_bits``,
+    ``page_size``, with ``policy`` supplying defaults), constructs the
+    matching codec with its capabilities (``fused_decode`` — explicit
+    argument, else ``policy.fused_decode`` — and the serving-TP axis),
+    and zero-initializes the pool.  With an active ``dist`` + ``mesh``
+    the pool is placed sharded per
+    :meth:`repro.dist.sharding.ShardingRules.pool_shardings`: kv heads
+    over ``model`` (TP), and — for slot-major pools under ``cp_decode``
+    — the ring window over ``data`` (CP).
+
+    Incoherent parallelism requests raise
+    :class:`repro.dist.MeshConfigError` here, at construction, instead
+    of a late jit/GSPMD failure: an active context without its mesh, CP
+    over a paged arena (pages tile the very axis CP would shard), a KV
+    window the CP degree does not divide.
+    """
+    from repro.dist import DistCtx, MeshConfigError
+    from repro.models import layers as L
+    from . import paged as paged_mod
+
+    dist = dist or DistCtx()
+    if dist.active and mesh is None:
+        raise MeshConfigError(
+            "an active DistCtx needs the mesh it names; pass "
+            "mesh=launch.mesh.make_serve_mesh(...)")
+    if dist.active:
+        missing = [a for a in dist.all_axes if a not in mesh.shape]
+        if missing:
+            raise MeshConfigError(
+                f"DistCtx names mesh axes {missing} absent from the mesh "
+                f"{dict(mesh.shape)}")
+
+    fused = bool(getattr(policy, "fused_decode", False)) \
+        if fused_decode is None else bool(fused_decode)
+    psize = page_size if page_size is not None else \
+        int(getattr(policy, "page_size", 0))
+    psize = int(psize) if psize else 0
+    tp_axis = "model" if (dist.active and "model" in dist.all_axes) else None
+    cp = bool(dist.active and dist.cp_decode and dist.cp_axis)
+    if cp and psize:
+        raise MeshConfigError(
+            "context parallelism cannot shard a paged arena: pages tile "
+            "the window axis CP would shard — use the slot-major pool "
+            "(page_size=0) with cp, or drop cp for paged serving")
+    if cp:
+        cp_size = int(mesh.shape.get(dist.cp_axis, 1))
+        if cp_size > 1 and max_len % cp_size:
+            raise MeshConfigError(
+                f"max_len {max_len} is not divisible by the CP degree "
+                f"{cp_size}: the KV window must shard evenly")
+
+    if cache_bits:
+        ccfg = cache_cfg or CacheQuantConfig(width=cache_bits)
+        if ccfg.width != cache_bits:
+            raise ValueError("cache_bits and cache_cfg.width disagree")
+    else:
+        ccfg = None    # a cache_cfg without cache_bits is ignored (f32)
+
+    if psize:
+        if cfg.family != "dense" or cfg.num_experts or cfg.encoder_layers:
+            raise ValueError(
+                "paged KV pool requires the dense attention family "
+                "(chunked prefill writes pages incrementally)")
+        codec = paged_mod.PagedKVCodec(psize, ccfg, tp_axis=tp_axis)
+        codec._fused_decode = fused
+        pool = paged_mod.make_paged_pool(cfg, max_slots, max_len, codec,
+                                         n_pages=n_pages)
+        nblocks = -(-max_len // psize)
+        total_pages = n_pages if n_pages is not None else \
+            1 + max_slots * nblocks
+    else:
+        nblocks, total_pages = 0, 0
+        if ccfg is not None:
+            codec = PackedKVCodec(ccfg, tp_axis=tp_axis)
+            codec._fused_decode = fused
+        elif fused:
+            # f32 pool, fused decode: the raw codec routes attention
+            # through the flash kernels (width=None)
+            codec = L.RawKVCodec(tp_axis=tp_axis)
+            codec._fused_decode = True
+        else:
+            codec = None
+        pool = make_pool(cfg, max_slots, max_len,
+                         codec if ccfg is not None else None)
+
+    shardings = None
+    if dist.active:
+        from repro.dist.sharding import ShardingRules
+        rules = ShardingRules(mesh, shard_batch=False, seq_shard_cache=cp)
+        shardings = rules.pool_shardings(pool)
+        pool = jax.device_put(pool, shardings)
+    return KVPool(pool=pool, codec=codec, cache_cfg=ccfg, page_size=psize,
+                  total_pages=total_pages, nblocks=nblocks,
+                  shardings=shardings)
 
 
 def insert(pool: dict, raw_entry: dict, slots: Array,

@@ -140,12 +140,27 @@ class PagedKVCodec:
     """
 
     def __init__(self, page_size: int, config: Optional[CacheQuantConfig]
-                 = None, fused_decode: bool = False):
+                 = None, fused_decode: Optional[bool] = None, *,
+                 tp_axis: Optional[str] = None):
         if page_size < 1:
             raise ValueError(f"page_size {page_size} < 1")
+        if fused_decode is not None:
+            import warnings
+            warnings.warn(
+                "PagedKVCodec(fused_decode=...) is deprecated; build "
+                "pools through repro.serve.kv_pool.make_kv_pool, which "
+                "owns the decode-path choice", DeprecationWarning,
+                stacklevel=2)
         self.page_size = page_size
         self.cfg = config
-        self.fused_decode = fused_decode
+        self._fused_decode = bool(fused_decode)
+        self.tp_axis = tp_axis
+
+    @property
+    def fused_decode(self) -> bool:
+        """Whether decode/prefill attention runs the fused paged kernels
+        on the page arenas (set by the pool factory)."""
+        return self._fused_decode
 
     @property
     def width(self) -> Optional[int]:
@@ -174,7 +189,8 @@ class PagedKVCodec:
         return flash_decode_paged(
             qg, entry["k_m"], entry["v_m"], entry["bt"], entry["pos"], q_pos,
             entry.get("k_e"), entry.get("v_e"), width=self.width,
-            scale=scale, window=window, causal=causal)
+            scale=scale, window=window, causal=causal,
+            tp_axis=self.tp_axis)
 
     def fused_prefill(self, entry: dict, qg: Array, k_new: Array,
                       v_new: Array, p0: Array, n_valid: Array, *,
@@ -184,7 +200,8 @@ class PagedKVCodec:
         return flash_prefill_paged(
             qg, k_new, v_new, entry["k_m"], entry["v_m"], entry["bt"],
             entry["pos"], p0, n_valid, entry.get("k_e"), entry.get("v_e"),
-            width=self.width, scale=scale, window=window, causal=causal)
+            width=self.width, scale=scale, window=window, causal=causal,
+            tp_axis=self.tp_axis)
 
     def append(self, entry: dict, k_new: Array, v_new: Array,
                pos: Array, mask: Optional[Array] = None) -> dict:

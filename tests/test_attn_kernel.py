@@ -10,7 +10,8 @@ from repro.kernels import dispatch
 from repro.kernels.attn import ref as R
 from repro.kernels.attn.ops import flash_decode
 from repro.models import transformer as T
-from repro.serve import CacheQuantConfig, PackedKVCodec, ServeEngine
+from repro.serve import (CacheQuantConfig, EngineOptions, PackedKVCodec,
+                         ServeEngine)
 
 
 def _case(key, B, W, K, G, hd, width, n_valid=None, holes=False):
@@ -228,7 +229,7 @@ def prompts(model):
 
 def _serve(cfg, params, prompts, policy, bits, max_new=6):
     eng = ServeEngine(cfg, policy, params, max_slots=2, max_len=24,
-                      cache_bits=bits)
+                      options=EngineOptions(cache_bits=bits))
     uids = [eng.submit(p, max_new=max_new) for p in prompts]
     out = eng.run()
     return [out[u] for u in uids], eng
@@ -283,10 +284,11 @@ def test_fused_decode_stochastic_cache(model, prompts):
     outs = []
     for pol in (POL, POL_FUSED):
         eng = ServeEngine(cfg, pol, params, max_slots=2, max_len=24,
-                          cache_bits=8,
-                          cache_cfg=CacheQuantConfig(width=8,
-                                                     stochastic=True),
-                          seed=7)
+                          options=EngineOptions(
+                              cache_bits=8,
+                              cache_cfg=CacheQuantConfig(width=8,
+                                                         stochastic=True),
+                              seed=7))
         uids = [eng.submit(p, max_new=5) for p in prompts]
         out = eng.run()
         outs.append([out[u] for u in uids])

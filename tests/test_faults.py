@@ -19,8 +19,8 @@ import jax
 from repro import configs
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
-from repro.serve import (AdmitDelay, FaultHarness, KVBitFlip, LogitNaN,
-                         PageSqueeze, RequestStatus, SamplerConfig,
+from repro.serve import (AdmitDelay, EngineOptions, FaultHarness, KVBitFlip,
+                         LogitNaN, PageSqueeze, RequestStatus, SamplerConfig,
                          ServeEngine, chaos_plan)
 from repro.serve import metrics as M
 
@@ -49,8 +49,9 @@ def _mk(model, *, bits=0, slots=2, n_pages=None, faults=None,
     pol = PrecisionPolicy("dfxp", fused_decode=bool(bits), prefill_chunk=P,
                           page_size=P)
     return ServeEngine(cfg, pol, params, max_slots=slots, max_len=MAXLEN,
-                       cache_bits=bits, n_pages=n_pages, faults=faults,
-                       sampler_cfg=sampler or SamplerConfig(), **kw)
+                       options=EngineOptions(
+                           cache_bits=bits, n_pages=n_pages, faults=faults,
+                           sampler_cfg=sampler or SamplerConfig(), **kw))
 
 
 def _submit_all(eng, ps, max_new=6):

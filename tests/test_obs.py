@@ -27,7 +27,7 @@ from repro.obs import (
     train_records,
     validate_trace,
 )
-from repro.serve import CacheQuantConfig, ServeEngine
+from repro.serve import CacheQuantConfig, EngineOptions, ServeEngine
 from repro.serve.metrics import ServeMetrics
 
 
@@ -398,9 +398,12 @@ def traced_run(model, prompts):
     tracer = Tracer()
     nlog = NumericsLog()
     eng = ServeEngine(cfg, POL_CHUNK, params, max_slots=2, max_len=24,
-                      cache_bits=8,
-                      cache_cfg=CacheQuantConfig(width=8, update_interval=2),
-                      tracer=tracer, numerics_log=nlog, numerics_every=2)
+                      options=EngineOptions(
+                          cache_bits=8,
+                          cache_cfg=CacheQuantConfig(width=8,
+                                                     update_interval=2),
+                          tracer=tracer, numerics_log=nlog,
+                          numerics_every=2))
     out = _run_wave(eng, prompts)
     return eng, tracer, nlog, out
 
@@ -432,9 +435,10 @@ def test_traced_tokens_bit_identical_to_untraced(model, prompts, traced_run):
     cfg, params = model
     _, _, _, traced_out = traced_run
     plain = ServeEngine(cfg, POL_CHUNK, params, max_slots=2, max_len=24,
-                        cache_bits=8,
-                        cache_cfg=CacheQuantConfig(width=8,
-                                                   update_interval=2))
+                        options=EngineOptions(
+                            cache_bits=8,
+                            cache_cfg=CacheQuantConfig(width=8,
+                                                       update_interval=2)))
     plain_out = _run_wave(plain, prompts)
     for a, b in zip(traced_out, plain_out):
         np.testing.assert_array_equal(a, b)

@@ -10,8 +10,8 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels.attn import ref as AR
 from repro.kernels.attn.ops import flash_decode_paged, flash_prefill_paged
 from repro.models import transformer as T
-from repro.serve import (CacheQuantConfig, RequestStatus, ServeEngine,
-                         kv_pool, paged)
+from repro.serve import (CacheQuantConfig, EngineOptions, RequestStatus,
+                         ServeEngine, kv_pool, paged)
 
 SCALE = 0.3
 
@@ -316,7 +316,9 @@ def _mk(model, *, bits=0, fused=False, page=True, slots=2, n_pages=None,
     pol = PrecisionPolicy("dfxp", fused_decode=fused, prefill_chunk=P_ENG,
                           page_size=P_ENG if page else 0)
     return ServeEngine(cfg, pol, params, max_slots=slots, max_len=MAXLEN,
-                       cache_bits=bits, cache_cfg=cache_cfg, n_pages=n_pages)
+                       options=EngineOptions(cache_bits=bits,
+                                             cache_cfg=cache_cfg,
+                                             n_pages=n_pages))
 
 
 def _run(eng, prompts, max_new=6):

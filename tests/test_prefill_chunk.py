@@ -16,6 +16,7 @@ from repro.launch.serve import Engine as LockstepEngine
 from repro.models import transformer as T
 from repro.serve import (
     CacheQuantConfig,
+    EngineOptions,
     PackedKVCodec,
     SamplerConfig,
     ServeEngine,
@@ -274,7 +275,7 @@ def _drive(cfg, params, prompts, *, bits, chunk, fused=False, max_new=6,
     pol = PrecisionPolicy("float32", fused_decode=fused,
                           prefill_chunk=chunk)
     eng = ServeEngine(cfg, pol, params, max_slots=slots, max_len=max_len,
-                      cache_bits=bits)
+                      options=EngineOptions(cache_bits=bits))
     uids = [eng.submit(p, max_new=max_new) for p in prompts]
     out = eng.run()
     return [out[u] for u in uids], eng
@@ -345,7 +346,7 @@ def test_chunked_admission_into_freed_slot_matches_solo(model, prompts):
     reqs = [(prompts[0], 3), (prompts[1], 8), (prompts[0][:5], 5)]
     pol = PrecisionPolicy("float32", prefill_chunk=4)
     eng = ServeEngine(cfg, pol, params, max_slots=2, max_len=24,
-                      cache_bits=8)
+                      options=EngineOptions(cache_bits=8))
     uids = [eng.submit(p, max_new=m) for p, m in reqs]
     out = eng.run()
     solo, _ = _drive(cfg, params, [prompts[0][:5]], bits=8, chunk=4,
@@ -373,10 +374,11 @@ def test_chunked_stochastic_topk_solo_equals_batched(model, prompts):
     """Per-request PRNG streams survive chunked admission: stochastic
     cache + top-k sampling draw identical tokens solo vs batched."""
     cfg, params = model
-    kw = dict(max_slots=2, max_len=24, cache_bits=8,
-              cache_cfg=CacheQuantConfig(width=8, stochastic=True),
-              sampler_cfg=SamplerConfig("top_k", temperature=0.9, top_k=8),
-              seed=7)
+    kw = dict(max_slots=2, max_len=24, options=EngineOptions(
+        cache_bits=8,
+        cache_cfg=CacheQuantConfig(width=8, stochastic=True),
+        sampler_cfg=SamplerConfig("top_k", temperature=0.9, top_k=8),
+        seed=7))
     pol = PrecisionPolicy("float32", prefill_chunk=3)
     a = ServeEngine(cfg, pol, params, **kw)
     uids = [a.submit(p, max_new=4) for p in prompts[:2]]

@@ -10,6 +10,7 @@ from repro.launch.serve import Engine as LockstepEngine
 from repro.models import transformer as T
 from repro.serve import (
     CacheQuantConfig,
+    EngineOptions,
     PackedKVCodec,
     SamplerConfig,
     ServeEngine,
@@ -66,7 +67,7 @@ def test_packed_cache_matches_f32_greedy(model, prompts, f32_eng):
     ref, _ = _wave(f32_eng, [(p, 8) for p in prompts])
     for bits in (8, 16):
         eng = ServeEngine(cfg, POL, params, max_slots=2, max_len=24,
-                          cache_bits=bits)
+                          options=EngineOptions(cache_bits=bits))
         out, _ = _wave(eng, [(p, 8) for p in prompts])
         for o, r in zip(out, ref):
             np.testing.assert_array_equal(o, r)
@@ -157,10 +158,11 @@ def test_stochastic_sampling_solo_equals_batched(model, prompts):
     """Per-request PRNG streams: a top-k request draws the same tokens
     alone as when batched with another request (stochastic cache too)."""
     cfg, params = model
-    kw = dict(max_slots=2, max_len=24, cache_bits=8,
-              cache_cfg=CacheQuantConfig(width=8, stochastic=True),
-              sampler_cfg=SamplerConfig("top_k", temperature=0.9, top_k=8),
-              seed=7)
+    kw = dict(max_slots=2, max_len=24, options=EngineOptions(
+        cache_bits=8,
+        cache_cfg=CacheQuantConfig(width=8, stochastic=True),
+        sampler_cfg=SamplerConfig("top_k", temperature=0.9, top_k=8),
+        seed=7))
     a = ServeEngine(cfg, POL, params, **kw)
     batched, _ = _wave(a, [(p, 4) for p in prompts])
     b = ServeEngine(cfg, POL, params, **kw)

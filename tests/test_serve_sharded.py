@@ -1,0 +1,359 @@
+"""Multi-device serving: sharded bit-identity + the construction API.
+
+Two halves:
+
+* single-process tests for the redesigned construction surface —
+  ``EngineOptions`` (and the one-release loose-kwarg shim), the
+  ``make_kv_pool`` factory's codec/layout ownership, the codecs'
+  deprecated ``fused_decode=`` constructor argument, and the typed
+  ``MeshConfigError`` construction failures that need no real mesh;
+
+* ``multidevice``-marked subprocess tests (the ``test_dist.py`` idiom:
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set before jax
+  imports) pinning the load-bearing acceptance property — sharded
+  engines produce greedy token streams **bit-identical** to the
+  single-device engine: 2- and 4-way TP across f32/int8, fused and
+  unfused pools, and a CP window-sharded long-context slot.
+"""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import PrecisionPolicy
+from repro.dist import DistCtx, MeshConfigError, serve_pod_ctx
+from repro.launch.mesh import make_serve_mesh
+from repro.models import transformer as T
+from repro.models.layers import RawKVCodec
+from repro.serve import (
+    CacheQuantConfig,
+    EngineOptions,
+    PackedKVCodec,
+    PagedKVCodec,
+    ServeEngine,
+    make_kv_pool,
+)
+
+POL = PrecisionPolicy("float32")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# EngineOptions + the one-release loose-kwarg shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_and_build_identical_options(model):
+    """Loose kwargs still work for one release: DeprecationWarning, and
+    the resulting engine carries exactly the EngineOptions an options=
+    caller would have passed."""
+    cfg, params = model
+    with pytest.warns(DeprecationWarning, match="options=EngineOptions"):
+        legacy = ServeEngine(cfg, POL, params, max_slots=2, max_len=24,
+                             cache_bits=8, seed=3, queue_cap=5)
+    new = ServeEngine(cfg, POL, params, max_slots=2, max_len=24,
+                      options=EngineOptions(cache_bits=8, seed=3,
+                                            queue_cap=5))
+    assert legacy.options == new.options
+    assert legacy.seed == 3 and legacy.queue_cap == 5
+    assert legacy.cache_cfg.width == new.cache_cfg.width == 8
+
+
+def test_legacy_kwargs_overlay_explicit_options(model):
+    """options= plus loose kwargs: the kwargs overlay field-by-field (and
+    still warn) — a mixed caller mid-migration keeps working."""
+    cfg, params = model
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(cfg, POL, params, max_slots=1, max_len=16,
+                          options=EngineOptions(cache_bits=8), seed=7)
+    assert eng.options == EngineOptions(cache_bits=8, seed=7)
+
+
+def test_unknown_kwarg_raises_typeerror(model):
+    cfg, params = model
+    with pytest.raises(TypeError, match="cache_bitz"):
+        ServeEngine(cfg, POL, params, max_slots=1, max_len=16,
+                    cache_bitz=8)
+
+
+def test_options_default_engine_has_no_warning(model):
+    """The blessed path is warning-free."""
+    cfg, params = model
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = ServeEngine(cfg, POL, params, max_slots=1, max_len=16,
+                          options=EngineOptions())
+    assert eng.options == EngineOptions()
+    assert eng.codec is None and not eng.dist.active
+
+
+# ---------------------------------------------------------------------------
+# codec fused_decode= deprecation + make_kv_pool factory ownership
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ctor", [
+    lambda: RawKVCodec(True),
+    lambda: PackedKVCodec(CacheQuantConfig(width=8), True),
+    lambda: PagedKVCodec(8, None, False),
+], ids=["raw", "packed", "paged"])
+def test_codec_fused_decode_ctor_deprecated(ctor):
+    with pytest.warns(DeprecationWarning, match="make_kv_pool"):
+        codec = ctor()
+    # the property survives as read-only capability metadata
+    with pytest.raises(AttributeError):
+        codec.fused_decode = True
+
+
+def test_factory_owns_layout_and_fused_choice(model):
+    """make_kv_pool resolves raw/slot-major/paged + fused from policy,
+    without tripping the ctor deprecation (it is the blessed owner)."""
+    cfg, _ = model
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        plain = make_kv_pool(cfg, POL, max_slots=2, max_len=16)
+        fused = make_kv_pool(
+            cfg, PrecisionPolicy("float32", fused_decode=True),
+            max_slots=2, max_len=16)
+        packed = make_kv_pool(cfg, POL, max_slots=2, max_len=16,
+                              cache_bits=8, fused_decode=True)
+        paged = make_kv_pool(cfg, POL, max_slots=2, max_len=16,
+                             page_size=8)
+    assert plain.codec is None and not plain.packed and not plain.paged
+    assert isinstance(fused.codec, RawKVCodec) and fused.codec.fused_decode
+    assert isinstance(packed.codec, PackedKVCodec)
+    assert packed.codec.fused_decode and packed.cache_cfg.width == 8
+    assert isinstance(paged.codec, PagedKVCodec) and paged.paged
+    assert paged.page_size == 8 and paged.nblocks == 2
+    assert paged.total_pages == 1 + 2 * 2   # null page + full residency
+    # explicit fused_decode= overrides the policy default
+    assert not make_kv_pool(
+        cfg, PrecisionPolicy("float32", fused_decode=True),
+        max_slots=2, max_len=16, fused_decode=False).codec
+
+
+def test_factory_width_disagreement_raises(model):
+    cfg, _ = model
+    with pytest.raises(ValueError, match="disagree"):
+        make_kv_pool(cfg, POL, max_slots=2, max_len=16, cache_bits=8,
+                     cache_cfg=CacheQuantConfig(width=16))
+
+
+# ---------------------------------------------------------------------------
+# typed construction failures (no real mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_active_dist_without_mesh_raises(model):
+    cfg, params = model
+    dist = DistCtx(ep_axis="model", all_axes=("model",))
+    with pytest.raises(MeshConfigError, match="needs the mesh"):
+        ServeEngine(cfg, POL, params, max_slots=1, max_len=16, dist=dist)
+    with pytest.raises(MeshConfigError, match="needs the mesh"):
+        make_kv_pool(cfg, POL, dist, max_slots=1, max_len=16)
+
+
+def test_cp_over_paged_arena_raises(model):
+    """CP + paged is incoherent (pages tile the axis CP would shard) and
+    must fail typed at construction, not as a late GSPMD error."""
+    cfg, _ = model
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(MeshConfigError, match="paged"):
+        make_kv_pool(cfg, POL, serve_pod_ctx(cp=2), max_slots=1,
+                     max_len=16, page_size=8, mesh=mesh)
+
+
+def test_mesh_oversubscription_raises():
+    with pytest.raises(MeshConfigError, match="device"):
+        make_serve_mesh(tp=jax.device_count() * 2)
+
+
+def test_pod_ctx_rejects_nonpositive_degrees():
+    with pytest.raises(MeshConfigError):
+        serve_pod_ctx(tp=0)
+    with pytest.raises(MeshConfigError):
+        serve_pod_ctx(cp=-1)
+
+
+# ---------------------------------------------------------------------------
+# multidevice: sharded-vs-single-device greedy bit-identity
+# ---------------------------------------------------------------------------
+
+def _run_subprocess(body: str, prelude: str = "") -> str:
+    """Run ``prelude + dedent(body)`` in a fresh interpreter with 8
+    forced host devices.
+
+    The flag must be set before jax imports, which is why these tests
+    cannot run in-process (the parent already initialized 1 device).
+    ``body`` is dedented *before* the column-0 prelude is prepended —
+    dedenting the concatenation would be a no-op and leave the body
+    nested inside the prelude's last ``def``.
+    """
+    script = ("import os\n"
+              "os.environ['XLA_FLAGS'] = "
+              "'--xla_force_host_platform_device_count=8'\n"
+              + prelude + textwrap.dedent(body))
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, \
+        f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return res.stdout
+
+
+_SHARDED_PRELUDE = """
+import dataclasses
+import numpy as np
+import jax
+from repro import configs
+from repro.core.policy import PrecisionPolicy
+from repro.dist import serve_pod_ctx
+from repro.launch.mesh import make_serve_mesh
+from repro.models import transformer as T
+from repro.serve import EngineOptions, ServeEngine
+
+def wave(eng, prompts, max_new):
+    uids = [eng.submit(p, max_new=max_new) for p in prompts]
+    out = eng.run()
+    return [np.asarray(out[u]) for u in uids]
+
+def check(tag, cfg, policy, params, opts, prompts, max_new, max_len,
+          tp=1, cp=1):
+    ref = ServeEngine(cfg, policy, params, max_slots=2, max_len=max_len,
+                      options=opts)
+    want = wave(ref, prompts, max_new)
+    eng = ServeEngine(cfg, policy, params, max_slots=2, max_len=max_len,
+                      options=opts, dist=serve_pod_ctx(tp=tp, cp=cp),
+                      mesh=make_serve_mesh(tp=tp, cp=cp))
+    got = wave(eng, prompts, max_new)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g), tag
+    print(tag, 'IDENTICAL')
+"""
+
+
+@pytest.mark.multidevice
+def test_tp_sharded_greedy_bit_identity():
+    """2- and 4-way TP == single-device, bit-for-bit, across f32/int8
+    pools, fused and unfused decode (tp4 widens the smoke model to 4 kv
+    heads so the head axis shards 1-per-device)."""
+    out = _run_subprocess("""
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size))
+    pol = PrecisionPolicy("float32")
+    pol_f = PrecisionPolicy("float32", fused_decode=True)
+    check('tp2_f32', cfg, pol, params, EngineOptions(),
+          prompts, 8, 24, tp=2)
+    check('tp2_f32_fused', cfg, pol_f, params, EngineOptions(),
+          prompts, 8, 24, tp=2)
+    check('tp2_int8', cfg, pol, params, EngineOptions(cache_bits=8),
+          prompts, 8, 24, tp=2)
+    check('tp2_int8_fused', cfg, pol_f, params,
+          EngineOptions(cache_bits=8), prompts, 8, 24, tp=2)
+
+    cfg4 = dataclasses.replace(cfg, num_kv_heads=4)
+    params4 = T.init_params(cfg4, jax.random.PRNGKey(0))
+    check('tp4_f32', cfg4, pol, params4, EngineOptions(),
+          prompts, 8, 24, tp=4)
+    check('tp4_int8_fused', cfg4, pol_f, params4,
+          EngineOptions(cache_bits=8), prompts, 8, 24, tp=4)
+    """, prelude=_SHARDED_PRELUDE)
+    assert out.count("IDENTICAL") == 6
+
+
+@pytest.mark.multidevice
+def test_tp_sharded_paged_bit_identity():
+    """TP over the paged arena (pages keep full windows; kv heads shard
+    within each page) matches single-device paged serving exactly."""
+    out = _run_subprocess("""
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size))
+    pol_f = PrecisionPolicy("float32", fused_decode=True)
+    check('tp2_int8_paged', cfg, pol_f, params,
+          EngineOptions(cache_bits=8, page_size=8), prompts, 8, 24, tp=2)
+    """, prelude=_SHARDED_PRELUDE)
+    assert out.count("IDENTICAL") == 1
+
+
+@pytest.mark.multidevice
+def test_cp_sharded_long_context_bit_identity():
+    """CP window-sharding (exact log-sum-exp merge) on long-context
+    slots: token streams match single-device for f32 and a chunked-
+    prefill int8 pool, at cp=2 and cp=4."""
+    out = _run_subprocess("""
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 40), 0, cfg.vocab_size))
+    pol = PrecisionPolicy("float32")
+    check('cp2_f32', cfg, pol, params, EngineOptions(),
+          prompts, 8, 64, cp=2)
+    check('cp2_int8_chunked', cfg, pol, params,
+          EngineOptions(cache_bits=8, prefill_chunk=16),
+          prompts, 8, 64, cp=2)
+    check('cp4_f32', cfg, pol, params, EngineOptions(),
+          prompts, 8, 64, cp=4)
+    """, prelude=_SHARDED_PRELUDE)
+    assert out.count("IDENTICAL") == 3
+
+
+@pytest.mark.multidevice
+def test_cp_window_divisibility_enforced():
+    """A max_len the CP degree does not divide fails typed, at
+    construction (needs a real cp=2 mesh, hence the subprocess)."""
+    _run_subprocess("""
+    import jax
+    from repro import configs
+    from repro.core.policy import PrecisionPolicy
+    from repro.dist import MeshConfigError, serve_pod_ctx
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import transformer as T
+    from repro.serve import ServeEngine
+
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    try:
+        ServeEngine(cfg, PrecisionPolicy("float32"), params,
+                    max_slots=1, max_len=63,
+                    dist=serve_pod_ctx(cp=2), mesh=make_serve_mesh(cp=2))
+    except MeshConfigError as e:
+        assert "divisible" in str(e), e
+    else:
+        raise AssertionError("indivisible max_len did not raise")
+    print("OK")
+    """)
+
+
+@pytest.mark.multidevice
+def test_engine_derives_dist_from_mesh():
+    """mesh= alone is enough: the engine derives the serving context
+    from the mesh's axis sizes and still matches single-device."""
+    out = _run_subprocess("""
+    cfg = configs.get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size))
+    pol = PrecisionPolicy("float32")
+    ref = ServeEngine(cfg, pol, params, max_slots=2, max_len=24)
+    want = wave(ref, prompts, 6)
+    eng = ServeEngine(cfg, pol, params, max_slots=2, max_len=24,
+                      mesh=make_serve_mesh(tp=2))
+    assert eng.dist.active and "model" in eng.dist.all_axes
+    got = wave(eng, prompts, 6)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    print("IDENTICAL")
+    """, prelude=_SHARDED_PRELUDE)
+    assert "IDENTICAL" in out
